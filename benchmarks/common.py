@@ -1,0 +1,47 @@
+"""Shared benchmark plumbing: one CSV row per (benchmark, sub-config).
+
+Row format (required by the harness): ``name,us_per_call,derived``.
+``us_per_call`` is the benchmark's primary per-call latency in microseconds;
+``derived`` is the headline derived quantity (speedup, hit-rate, RPS …).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
+
+
+@dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: str
+    extra: dict = field(default_factory=dict)
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.3f},{self.derived}"
+
+
+def emit(rows: List[Row]) -> None:
+    for r in rows:
+        print(r.csv())
+
+
+def save_json(bench: str, payload) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{bench}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=str)
+    return path
+
+
+def percentile(sorted_vals, q: float) -> float:
+    if not sorted_vals:
+        return 0.0
+    idx = min(int(q * len(sorted_vals)), len(sorted_vals) - 1)
+    return sorted_vals[idx]

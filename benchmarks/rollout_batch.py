@@ -1,0 +1,48 @@
+"""Paper Fig. 7: total rollout and batch times with vs without TVCache.
+
+(a) per-rollout total times (sorted), (b) per-batch times — a batch is a
+task's parallel rollout group, so batch time is the slowest rollout (gains
+are smaller than per-rollout gains, as the paper observes).
+EgoSchema-style workload, as in the paper's figure.
+"""
+
+from __future__ import annotations
+
+import statistics
+
+from repro.data import make_workload
+from repro.rl.harness import WorkloadRunner
+
+from .common import Row, save_json
+
+
+def run() -> list:
+    spec = make_workload("video")
+    kw = dict(n_tasks=8, n_epochs=4)
+    on = WorkloadRunner(spec, use_cache=True).run(**kw)
+    off = WorkloadRunner(spec, use_cache=False).run(**kw)
+
+    r_on, r_off = on.rollout_times(), off.rollout_times()
+    b_on, b_off = on.batch_times(), off.batch_times()
+    mean = statistics.mean
+    rollout_gain = mean(r_off) / max(mean(r_on), 1e-9)
+    batch_gain = mean(b_off) / max(mean(b_on), 1e-9)
+    payload = {
+        "mean_rollout_s": {"tvcache": mean(r_on), "no_cache": mean(r_off)},
+        "mean_batch_s": {"tvcache": mean(b_on), "no_cache": mean(b_off)},
+        "rollout_speedup": rollout_gain,
+        "batch_speedup": batch_gain,
+        "batch_lower_than_rollout_gain": batch_gain <= rollout_gain + 0.05,
+    }
+    save_json("rollout_batch", payload)
+    return [
+        Row(
+            name="fig7_rollout_batch[video]",
+            us_per_call=mean(r_on) * 1e6,
+            derived=(
+                f"rollout_speedup={rollout_gain:.2f}x;"
+                f"batch_speedup={batch_gain:.2f}x;"
+                f"batch<=rollout={batch_gain <= rollout_gain + 0.05}"
+            ),
+        )
+    ]

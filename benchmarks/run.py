@@ -1,0 +1,70 @@
+"""Benchmark driver — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows; detailed payloads land in
+``results/bench/*.json`` (consumed by EXPERIMENTS.md §Paper).
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig5,table2,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from . import (
+    cache_latency,
+    fork_memory,
+    fork_scaling,
+    hit_rates,
+    reward_parity,
+    rollout_batch,
+    speedup,
+    sql_latency,
+    stateless_skip,
+    tool_overhead,
+)
+from .common import emit
+
+BENCHES = {
+    "fig2": tool_overhead,
+    "fig5": hit_rates,
+    "table2": speedup,
+    "sql": sql_latency,
+    "fig6": reward_parity,
+    "fig7": rollout_batch,
+    "fig8a": cache_latency,
+    "fig8b": fork_memory,
+    "fig13": fork_scaling,
+    "appB": stateless_skip,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark keys (default: all)")
+    args = ap.parse_args()
+    keys = args.only.split(",") if args.only else list(BENCHES)
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for key in keys:
+        mod = BENCHES[key]
+        t0 = time.time()
+        try:
+            rows = mod.run()
+            emit(rows)
+            print(f"# {key}: {len(rows)} rows in {time.time() - t0:.1f}s",
+                  file=sys.stderr)
+        except Exception as e:
+            failures += 1
+            print(f"{key},0,ERROR:{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        raise SystemExit(f"{failures} benchmarks failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""TVCache quickstart: the stateful tool-value cache in ~60 lines.
+
+Builds a cache server + sandbox manager for one terminal task, runs two
+rollouts that share a prefix, and shows: exact hits, the cat→patch→cat
+statefulness trap handled correctly, and the time saved.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+from repro.core import (
+    CacheConfig,
+    CacheServer,
+    SandboxManager,
+    ToolCall,
+    ToolCallExecutor,
+    VirtualClock,
+)
+from repro.envs import TerminalSandbox, make_terminal_task
+
+
+def main() -> None:
+    task = make_terminal_task(0)
+    clock = VirtualClock()
+    server = CacheServer(CacheConfig())
+    manager = SandboxManager(
+        env_factory=lambda: TerminalSandbox(clock, task), clock=clock
+    )
+    executor = ToolCallExecutor(server, manager)
+
+    def rollout(cmds):
+        session = executor.session(task.task_id)
+        clock.reset_thread()
+        outputs = [session.execute(ToolCall("bash", (c,))) for c in cmds]
+        elapsed = clock.reset_thread()
+        session.close()
+        return outputs, elapsed, session.hits
+
+    # Rollout 1: clone, inspect, patch, test — all misses, populates the TCG.
+    cmds1 = ["git_clone repo", "cat src/main.py",
+             "patch src/main.py BUG FIXED", "run_tests"]
+    out1, t1, hits1 = rollout(cmds1)
+    print(f"rollout 1: {t1:8.1f} simulated-s, {hits1} hits")
+
+    # Rollout 2: identical — every call is an exact hit, ~zero time.
+    out2, t2, hits2 = rollout(cmds1)
+    print(f"rollout 2: {t2:8.3f} simulated-s, {hits2} hits "
+          f"(speedup {t1 / max(t2, 1e-9):,.0f}x)")
+    assert [o.output for o in out1] == [o.output for o in out2]
+
+    # Rollout 3: shares the clone prefix, then DIVERGES — the cache must not
+    # alias `cat` before vs after the patch (the paper's §1 example).
+    cmds3 = ["git_clone repo", "cat src/main.py"]
+    out3, t3, hits3 = rollout(cmds3)
+    print(f"rollout 3: {t3:8.3f} simulated-s, {hits3}/2 hits")
+    assert "BUG" in out3[1].output       # pre-patch content
+    assert "FIXED" in out2[1].output or "BUG" in out2[1].output
+
+    print("\ncache stats:", server.stats_summary())
+    print("\nTCG:\n" + server.visualize(task.task_id))
+    manager.drain()
+
+
+if __name__ == "__main__":
+    main()

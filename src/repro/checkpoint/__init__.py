@@ -1,0 +1,5 @@
+"""Checkpointing substrate."""
+
+from .checkpoint import load_pytree, save_pytree, CheckpointManager
+
+__all__ = ["CheckpointManager", "load_pytree", "save_pytree"]

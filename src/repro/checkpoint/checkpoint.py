@@ -1,0 +1,110 @@
+"""Pytree checkpoints: msgpack + zstd, atomic writes, step-indexed manager.
+
+Arrays are stored as raw little-endian buffers with dtype/shape metadata;
+the tree structure is stored as nested msgpack maps/lists, so checkpoints
+are portable (no pickle) and restore onto any device layout.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+import zstandard as zstd
+
+
+def _encode(node):
+    if isinstance(node, dict):
+        return {"__t": "d", "v": {k: _encode(v) for k, v in node.items()}}
+    if isinstance(node, (list, tuple)):
+        return {
+            "__t": "l" if isinstance(node, list) else "t",
+            "v": [_encode(v) for v in node],
+        }
+    if node is None:
+        return {"__t": "n"}
+    arr = np.asarray(node)
+    return {
+        "__t": "a",
+        "dtype": arr.dtype.name,  # name (not .str): ml_dtypes like bfloat16
+        "shape": list(arr.shape),
+        "data": arr.tobytes(),
+    }
+
+
+def _decode(node):
+    t = node["__t"]
+    if t == "d":
+        return {k: _decode(v) for k, v in node["v"].items()}
+    if t == "l":
+        return [_decode(v) for v in node["v"]]
+    if t == "t":
+        return tuple(_decode(v) for v in node["v"])
+    if t == "n":
+        return None
+    try:
+        dtype = np.dtype(node["dtype"])
+    except TypeError:
+        import ml_dtypes
+
+        dtype = np.dtype(getattr(ml_dtypes, node["dtype"]))
+    arr = np.frombuffer(node["data"], dtype=dtype)
+    return jnp.asarray(arr.reshape(node["shape"]))
+
+
+def save_pytree(tree, path: str) -> None:
+    host_tree = jax.tree.map(np.asarray, tree)
+    blob = zstd.ZstdCompressor(level=3).compress(
+        msgpack.packb(_encode(host_tree), use_bin_type=True)
+    )
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(tmp, "wb") as f:
+        f.write(blob)
+    os.replace(tmp, path)
+
+
+def load_pytree(path: str):
+    with open(path, "rb") as f:
+        blob = f.read()
+    return _decode(
+        msgpack.unpackb(zstd.ZstdDecompressor().decompress(blob), raw=False)
+    )
+
+
+class CheckpointManager:
+    """Step-indexed checkpoints with retention."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    def _path(self, step: int) -> str:
+        return os.path.join(self.directory, f"ckpt_{step:08d}.msgpack.zst")
+
+    def steps(self) -> List[int]:
+        out = []
+        for fn in os.listdir(self.directory):
+            m = re.match(r"ckpt_(\d+)\.msgpack\.zst$", fn)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def save(self, step: int, tree) -> str:
+        path = self._path(step)
+        save_pytree(tree, path)
+        for old in self.steps()[: -self.keep]:
+            os.remove(self._path(old))
+        return path
+
+    def restore_latest(self) -> Optional[tuple]:
+        steps = self.steps()
+        if not steps:
+            return None
+        return steps[-1], load_pytree(self._path(steps[-1]))

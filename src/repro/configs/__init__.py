@@ -1,0 +1,60 @@
+"""Architecture registry: ``--arch <id>`` resolution.
+
+The 10 assigned architectures (public-literature pool) + the paper's own
+agent model.  ``get_config(id)`` returns the exact published spec;
+``get_smoke(id)`` returns the reduced CPU-testable variant of the same
+family.
+"""
+
+from importlib import import_module
+from typing import Dict, List
+
+from .base import INPUT_SHAPES, InputShape, ModelConfig
+
+_MODULES: Dict[str, str] = {
+    "internvl2-76b": ".internvl2_76b",
+    "minicpm3-4b": ".minicpm3_4b",
+    "qwen2.5-3b": ".qwen2_5_3b",
+    "mamba2-1.3b": ".mamba2_1_3b",
+    "command-r-35b": ".command_r_35b",
+    "qwen2-72b": ".qwen2_72b",
+    "llama4-scout-17b-a16e": ".llama4_scout_17b_a16e",
+    "seamless-m4t-large-v2": ".seamless_m4t_large_v2",
+    "grok-1-314b": ".grok_1_314b",
+    "zamba2-2.7b": ".zamba2_2_7b",
+    "qwen3-4b": ".qwen3_4b",  # the paper's own agent (Table 1)
+}
+
+#: the 10 assigned architectures (excludes the paper's own agent).
+ASSIGNED_ARCHS: List[str] = [k for k in _MODULES if k != "qwen3-4b"]
+
+
+def _module(arch: str):
+    if arch not in _MODULES:
+        raise KeyError(
+            f"unknown arch {arch!r}; available: {', '.join(sorted(_MODULES))}"
+        )
+    return import_module(_MODULES[arch], __name__)
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _module(arch).CONFIG
+
+
+def get_smoke(arch: str) -> ModelConfig:
+    return _module(arch).smoke()
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in _MODULES}
+
+
+__all__ = [
+    "ASSIGNED_ARCHS",
+    "INPUT_SHAPES",
+    "InputShape",
+    "ModelConfig",
+    "all_configs",
+    "get_config",
+    "get_smoke",
+]

@@ -1,0 +1,222 @@
+"""Model/architecture configuration system.
+
+Every assigned architecture gets one ``<id>.py`` in this package exporting a
+``CONFIG`` (the exact published spec, with a source citation) and a
+``smoke()`` reduced variant (≤2 layers, d_model≤512, ≤4 experts) used by the
+CPU smoke tests.  ``repro.configs.registry`` resolves ``--arch <id>``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    # -- identity ----------------------------------------------------------
+    name: str
+    family: str  # dense | moe | ssm | hybrid | encdec | vlm | audio
+    source: str = ""  # citation: arXiv id / HF model card
+
+    # -- transformer backbone ----------------------------------------------
+    n_layers: int = 2
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    d_ff: int = 1024
+    vocab_size: int = 1024
+    head_dim: int = 0  # 0 → d_model // n_heads
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    rope_theta: float = 1e6
+    norm_eps: float = 1e-5
+
+    # -- MLA (MiniCPM3 / DeepSeek-style) -------------------------------------
+    use_mla: bool = False
+    q_lora_rank: int = 768
+    kv_lora_rank: int = 256
+    qk_nope_head_dim: int = 64
+    qk_rope_head_dim: int = 32
+    v_head_dim: int = 64
+
+    # -- MoE -------------------------------------------------------------------
+    n_experts: int = 0
+    experts_per_token: int = 0
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+
+    # -- SSM (Mamba2 SSD) ---------------------------------------------------------
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 256
+    ssm_groups: int = 1
+
+    # -- hybrid (Zamba2: shared attention block every k SSM layers) -----------------
+    attn_every: int = 0  # 0 → no interleaved shared attention
+
+    # -- encoder-decoder (Seamless) ---------------------------------------------
+    n_encoder_layers: int = 0
+
+    # -- modality frontend stubs (VLM / audio): precomputed embeddings --------------
+    frontend_tokens: int = 0  # patch/frame embeddings prepended to the text
+    frontend_dim: int = 0  # raw embedding dim before the projector
+
+    # -- long context --------------------------------------------------------------
+    sliding_window: int = 0  # 0 → full attention
+
+    # -- numerics / execution -------------------------------------------------------
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    remat: bool = True
+    scan_layers: bool = True
+    use_pallas: bool = False  # pure-jnp path by default (CPU/dry-run safe)
+    attn_q_chunk: int = 512  # query-chunked attention block size
+
+    # -- §Perf hillclimb knobs (all default OFF = paper-faithful baseline) ------------
+    # Megatron-style sequence parallelism: keep block-boundary activations
+    # sequence-sharded on the model axis (turns TP all-reduces into
+    # reduce-scatter + all-gather pairs; halves collective bytes).
+    seq_parallel: bool = False
+    # MoE: compute expert capacity per token-group of this size instead of
+    # globally (0 = global — the naive GShard baseline).
+    moe_group_size: int = 0
+    # MoE: gather/scatter dispatch instead of dense one-hot einsums.
+    moe_gather_dispatch: bool = False
+    # MoE: split each expert's d_ff into this many "virtual experts" so the
+    # expert dim divides the model axis (grok: 8 experts × 2 = 16 ⇒ expert
+    # parallelism / all-to-all instead of tensor-parallel all-reduce).
+    moe_split_experts: int = 0
+    # Gradient accumulation: split the global batch into N microbatches.
+    microbatches: int = 0
+    # Chunked cross-entropy over the sequence dim (caps logits memory).
+    ce_chunk: int = 0
+    # Decode: replicate KV heads up to this count so the cache shards by
+    # head on the model axis (kills the seq-shard gather storm at the cost
+    # of (pad/kv)× cache memory).  0 = off.
+    kv_head_pad_to: int = 0
+    # FSDP parameter sharding over the data axis.  Keep ON for training
+    # (memory); turn OFF for serving — decode re-all-gathers the full weight
+    # set every token otherwise (§Perf hillclimb C finding).
+    fsdp_params: bool = True
+
+    # ------------------------------------------------------------------------
+
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // self.n_heads if self.n_heads else 0
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab padded so the model axis (≤16) divides it evenly."""
+        return _round_up(self.vocab_size, 256)
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # -- parameter counting (roofline MODEL_FLOPS) ------------------------------
+
+    def param_count(self, active_only: bool = False) -> int:
+        """Approximate parameter count; ``active_only`` counts top-k experts
+        only (MoE activated params, for 6·N_active·D)."""
+        D, F, V = self.d_model, self.d_ff, self.padded_vocab
+        H, KV, hd = self.n_heads, self.n_kv_heads, self.resolved_head_dim
+        total = V * D  # embedding
+        if not self.tie_embeddings:
+            total += D * V
+
+        def attn_params() -> int:
+            if self.use_mla:
+                qk_dim = self.qk_nope_head_dim + self.qk_rope_head_dim
+                return (
+                    D * self.q_lora_rank
+                    + self.q_lora_rank * H * qk_dim
+                    + D * (self.kv_lora_rank + self.qk_rope_head_dim)
+                    + self.kv_lora_rank * H * (self.qk_nope_head_dim + self.v_head_dim)
+                    + H * self.v_head_dim * D
+                )
+            return D * H * hd + 2 * D * KV * hd + H * hd * D
+
+        def mlp_params(n_exp_counted: int = 1) -> int:
+            return n_exp_counted * 3 * D * F  # gated SwiGLU: w1, w3, w2
+
+        def ssm_params() -> int:
+            din = self.d_inner
+            # in_proj → [z, x, B, C, dt], conv, A, D, norm, out_proj
+            conv_ch = din + 2 * self.ssm_groups * self.ssm_state
+            return (
+                D * (2 * din + 2 * self.ssm_groups * self.ssm_state + self.ssm_heads)
+                + self.ssm_conv * conv_ch
+                + 2 * self.ssm_heads
+                + din
+                + din * D
+            )
+
+        if self.family == "ssm":
+            total += self.n_layers * ssm_params()
+        elif self.family == "hybrid":
+            n_attn = self.n_layers // self.attn_every if self.attn_every else 0
+            total += self.n_layers * ssm_params()
+            total += attn_params() + mlp_params()  # ONE shared block
+        elif self.family in ("encdec", "audio"):
+            enc = self.n_encoder_layers * (attn_params() + mlp_params())
+            dec = self.n_layers * (2 * attn_params() + mlp_params())  # +cross
+            total += enc + dec
+        else:
+            per_layer = attn_params()
+            if self.n_experts:
+                counted = (
+                    self.experts_per_token if active_only else self.n_experts
+                )
+                per_layer += mlp_params(counted) + D * self.n_experts  # router
+            else:
+                per_layer += mlp_params()
+            total += self.n_layers * per_layer
+        if self.frontend_tokens:
+            total += self.frontend_dim * D  # projector
+        return total
+
+
+@dataclass(frozen=True)
+class InputShape:
+    """One of the four assigned (seq_len × global_batch) input shapes."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}

@@ -1,0 +1,29 @@
+"""Command R 35B — dense GQA, no biases.
+
+[hf:CohereForAI/c4ai-command-r-v01] — 40L, d_model 8192, 64 heads (GQA kv=8),
+d_ff 22528, vocab 256000.
+"""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="command-r-35b",
+    family="dense",
+    source="hf:CohereForAI/c4ai-command-r-v01",
+    n_layers=40,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=22528,
+    vocab_size=256000,
+    qkv_bias=False,
+    sliding_window=8192,
+)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.replace(
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
+        vocab_size=512,
+        param_dtype="float32", compute_dtype="float32", remat=False,
+    )

@@ -1,0 +1,35 @@
+"""Grok-1 314B — MoE with 8 experts, top-2 routing.
+
+[hf:xai-org/grok-1] — 64L, d_model 6144, 48 heads (GQA kv=8), d_ff 32768 per
+expert, vocab 131072.
+
+Expert count (8) does NOT divide the model axis (16) ⇒ tensor-parallel
+experts: each expert's d_ff (32768) is sharded over the model axis while the
+expert dim stays replicated — the contrasting MoE sharding scheme to
+llama4-scout's expert parallelism (see DESIGN.md §4).
+"""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="grok-1-314b",
+    family="moe",
+    source="hf:xai-org/grok-1",
+    n_layers=64,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=32768,
+    vocab_size=131072,
+    n_experts=8,
+    experts_per_token=2,
+    sliding_window=8192,
+)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.replace(
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
+        vocab_size=512, n_experts=4, experts_per_token=2,
+        param_dtype="float32", compute_dtype="float32", remat=False,
+    )

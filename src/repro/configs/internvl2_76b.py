@@ -1,0 +1,32 @@
+"""InternVL2-76B language backbone (InternViT-6B + InternLM2-ish LLM).
+
+[arXiv:2404.16821] — 80L, d_model 8192, 64 heads (GQA kv=8), d_ff 28672,
+vocab 128256.  The ViT/SigLIP vision frontend is a STUB per the assignment:
+``input_specs()`` provides precomputed patch embeddings (frontend_dim=3200,
+InternViT-6B output width) which the projector maps into the LLM stream.
+"""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-76b",
+    family="vlm",
+    source="arXiv:2404.16821",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=28672,
+    vocab_size=128256,
+    frontend_tokens=1024,
+    frontend_dim=3200,
+    sliding_window=8192,  # enables the long_500k decode variant
+)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.replace(
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
+        vocab_size=512, frontend_tokens=8, frontend_dim=64,
+        param_dtype="float32", compute_dtype="float32", remat=False,
+    )

@@ -1,0 +1,35 @@
+"""Llama-4 Scout 17B-active / 16 experts — MoE with top-1 routing.
+
+[hf:meta-llama/Llama-4-Scout-17B-16E] — 48L, d_model 5120, 40 heads (GQA
+kv=8), d_ff 8192 per expert, vocab 202048, 16 experts top-1, early-fusion
+multimodal (text path modeled; vision tokens arrive via the stub frontend in
+the VLM assignment — here we run the text backbone).
+
+Expert count (16) matches the model axis (16) exactly ⇒ expert-parallel
+sharding, one expert per model shard; routing lowers to all-to-all.
+"""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama4-scout-17b-a16e",
+    family="moe",
+    source="hf:meta-llama/Llama-4-Scout-17B-16E",
+    n_layers=48,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    d_ff=8192,
+    vocab_size=202048,
+    n_experts=16,
+    experts_per_token=1,
+    sliding_window=8192,
+)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.replace(
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
+        vocab_size=512, n_experts=4, experts_per_token=1,
+        param_dtype="float32", compute_dtype="float32", remat=False,
+    )

@@ -1,0 +1,34 @@
+"""Mamba2-1.3B — attention-free SSM with SSD (state-space duality).
+
+[arXiv:2405.21060] — 48L, d_model 2048, d_ff 0 (no MLP; the Mamba2 block IS
+the mixer+channel mixer), vocab 50280, ssm_state 128.  Sub-quadratic decode:
+O(1) state per layer, so long_500k runs natively.
+"""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-1.3b",
+    family="ssm",
+    source="arXiv:2405.21060",
+    n_layers=48,
+    d_model=2048,
+    n_heads=0,
+    n_kv_heads=0,
+    d_ff=0,
+    vocab_size=50280,
+    ssm_state=128,
+    ssm_conv=4,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_chunk=256,
+    tie_embeddings=True,  # per model card
+)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.replace(
+        n_layers=2, d_model=128, vocab_size=512,
+        ssm_state=16, ssm_head_dim=32, ssm_chunk=32,
+        param_dtype="float32", compute_dtype="float32", remat=False,
+    )

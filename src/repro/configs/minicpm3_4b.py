@@ -1,0 +1,37 @@
+"""MiniCPM3-4B — Multi-head Latent Attention (MLA) dense model.
+
+[hf:openbmb/MiniCPM3-4B] — 62L, d_model 2560, 40 heads, d_ff 6400, vocab
+73448.  MLA hyperparameters follow the model card: q_lora_rank 768,
+kv_lora_rank 256, qk_nope 64, qk_rope 32, v_head 64.  The decode cache is the
+compressed latent (kv_lora_rank + rope) per token — ~18× smaller than GQA.
+"""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minicpm3-4b",
+    family="dense",
+    source="hf:openbmb/MiniCPM3-4B",
+    n_layers=62,
+    d_model=2560,
+    n_heads=40,
+    n_kv_heads=40,
+    d_ff=6400,
+    vocab_size=73448,
+    use_mla=True,
+    q_lora_rank=768,
+    kv_lora_rank=256,
+    qk_nope_head_dim=64,
+    qk_rope_head_dim=32,
+    v_head_dim=64,
+    sliding_window=8192,
+)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.replace(
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=4, d_ff=256,
+        vocab_size=512, q_lora_rank=48, kv_lora_rank=32,
+        qk_nope_head_dim=16, qk_rope_head_dim=8, v_head_dim=16,
+        param_dtype="float32", compute_dtype="float32", remat=False,
+    )

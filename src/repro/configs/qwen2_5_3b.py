@@ -1,0 +1,29 @@
+"""Qwen2.5-3B — dense GQA with QKV bias.
+
+[hf:Qwen/Qwen2.5-0.5B family card] — 36L, d_model 2048, 16 heads (GQA kv=2),
+d_ff 11008, vocab 151936.
+"""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2.5-3b",
+    family="dense",
+    source="hf:Qwen/Qwen2.5-0.5B",
+    n_layers=36,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=2,
+    d_ff=11008,
+    vocab_size=151936,
+    qkv_bias=True,
+    sliding_window=8192,
+)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.replace(
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
+        vocab_size=512,
+        param_dtype="float32", compute_dtype="float32", remat=False,
+    )

@@ -1,0 +1,29 @@
+"""Qwen2-72B — dense GQA with QKV bias.
+
+[arXiv:2407.10671] — 80L, d_model 8192, 64 heads (GQA kv=8), d_ff 29568,
+vocab 152064.
+"""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-72b",
+    family="dense",
+    source="arXiv:2407.10671",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=29568,
+    vocab_size=152064,
+    qkv_bias=True,
+    sliding_window=8192,
+)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.replace(
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
+        vocab_size=512,
+        param_dtype="float32", compute_dtype="float32", remat=False,
+    )

@@ -1,0 +1,51 @@
+"""Qwen3-4B-Instruct-2507 — the paper's own post-training agent (Table 1).
+
+[hf:Qwen/Qwen3-4B-Instruct-2507] — 36L, d_model 2560, 32 heads (GQA kv=8),
+d_ff 9728, vocab 151936.  Not part of the assigned-architecture pool; this is
+the model TVCACHE post-trains on terminal-bench, included so the paper's own
+workload is a first-class config.
+"""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-4b",
+    family="dense",
+    source="hf:Qwen/Qwen3-4B-Instruct-2507",
+    n_layers=36,
+    d_model=2560,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=9728,
+    vocab_size=151936,
+    qkv_bias=False,
+    sliding_window=8192,
+)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.replace(
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
+        vocab_size=512,
+        param_dtype="float32", compute_dtype="float32", remat=False,
+    )
+
+
+def toy_agent(vocab_size: int = 512, max_seq: int = 256) -> ModelConfig:
+    """~1–20M-param agent for CPU-trainable GRPO examples/tests."""
+    return ModelConfig(
+        name="toy-agent",
+        family="dense",
+        source="(this repo)",
+        n_layers=4,
+        d_model=256,
+        n_heads=8,
+        n_kv_heads=4,
+        d_ff=1024,
+        vocab_size=vocab_size,
+        rope_theta=1e4,
+        param_dtype="float32",
+        compute_dtype="float32",
+        remat=False,
+        scan_layers=True,
+    )

@@ -1,0 +1,38 @@
+"""Zamba2-2.7B — hybrid: Mamba2 backbone + shared attention blocks.
+
+[arXiv:2411.15242] — 54L, d_model 2560, 32 heads (kv=32) in the shared
+attention block, d_ff 10240, vocab 32000, ssm_state 64.  One attention+MLP
+block's *weights are shared* across its interleaved invocations (every 6
+Mamba2 layers), Zamba-style.  SSM decode state is O(1) ⇒ long_500k runs
+natively (attention inside uses a sliding window).
+"""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-2.7b",
+    family="hybrid",
+    source="arXiv:2411.15242",
+    n_layers=54,
+    d_model=2560,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=10240,
+    vocab_size=32000,
+    ssm_state=64,
+    ssm_conv=4,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_chunk=256,
+    attn_every=6,
+    sliding_window=4096,
+)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.replace(
+        n_layers=4, d_model=128, n_heads=4, n_kv_heads=4, d_ff=256,
+        vocab_size=512, ssm_state=16, ssm_head_dim=32, ssm_chunk=32,
+        attn_every=2, sliding_window=64,
+        param_dtype="float32", compute_dtype="float32", remat=False,
+    )

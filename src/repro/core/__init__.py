@@ -1,0 +1,64 @@
+"""TVCache core: the paper's contribution as a composable library.
+
+Public surface:
+
+* :class:`~repro.core.tcg.ToolCall`, :class:`~repro.core.tcg.ToolResult`,
+  :class:`~repro.core.tcg.ToolCallGraph` — the Tool Call Graph (§3.1).
+* :class:`~repro.core.cache.CacheServer`, :class:`~repro.core.cache.CacheConfig`
+  — the cache brain: LPM lookups, selective snapshotting, eviction (§3.2–3.3).
+* :class:`~repro.core.sandbox.ToolExecutionEnvironment`,
+  :class:`~repro.core.sandbox.SandboxManager` — sandbox lifecycle + proactive /
+  reactive / background forking (§3.3–3.4, Appendix E).
+* :class:`~repro.core.executor.ToolCallExecutor` — the tvclient integration
+  point for RL rollout loops (§3.4).
+* :class:`~repro.core.server.TVCacheHTTPServer`,
+  :class:`~repro.core.sharding.ShardedCacheClient` — deployment form (Fig. 4,
+  §4.5).
+"""
+
+from .cache import CacheConfig, CacheServer, PrefixMatchResponse, PutResponse
+from .clock import Clock, RealClock, VirtualClock
+from .executor import ExecutionOutcome, RolloutSession, ToolCallExecutor
+from .policy import EvictionPolicy, SnapshotPolicy, tcg_entropy
+from .sandbox import (
+    ForkPipeline,
+    ForkPipelineConfig,
+    SandboxManager,
+    ToolExecutionEnvironment,
+)
+from .serialize import SnapshotCostModel
+from .server import HTTPCacheClient, TVCacheHTTPServer
+from .sharding import ShardedCacheClient, ShardedHTTPDeployment, make_inprocess_shards
+from .stats import CacheStats
+from .tcg import LPMResult, TCGNode, ToolCall, ToolCallGraph, ToolResult
+
+__all__ = [
+    "CacheConfig",
+    "CacheServer",
+    "CacheStats",
+    "Clock",
+    "EvictionPolicy",
+    "ExecutionOutcome",
+    "ForkPipeline",
+    "ForkPipelineConfig",
+    "HTTPCacheClient",
+    "LPMResult",
+    "PrefixMatchResponse",
+    "PutResponse",
+    "RealClock",
+    "RolloutSession",
+    "SandboxManager",
+    "ShardedCacheClient",
+    "ShardedHTTPDeployment",
+    "SnapshotCostModel",
+    "SnapshotPolicy",
+    "TCGNode",
+    "ToolCall",
+    "ToolCallGraph",
+    "ToolCallExecutor",
+    "ToolExecutionEnvironment",
+    "TVCacheHTTPServer",
+    "VirtualClock",
+    "make_inprocess_shards",
+    "tcg_entropy",
+]

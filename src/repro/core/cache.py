@@ -1,0 +1,307 @@
+"""TVCache server-side logic (paper §3.2–§3.4).
+
+``CacheServer`` owns one ``ToolCallGraph`` per task plus the snapshotting /
+eviction policies and hit statistics.  It exposes the same operations as the
+paper's HTTP service — ``get`` (exact match), ``prefix_match`` (LPM, which
+also takes a reference on the returned sandbox, §3.4), ``put`` (insert an
+executed call, optionally with a snapshot), ``decref`` — through a
+thread-safe in-process API.  ``server.py`` wraps this in an actual HTTP
+server; ``sharding.py`` shards it by task ID.
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+from . import serialize
+from .policy import EvictionPolicy, SnapshotPolicy
+from .serialize import SnapshotCostModel
+from .stats import CacheStats
+from .tcg import LPMResult, TCGNode, ToolCall, ToolCallGraph, ToolResult
+
+
+@dataclass
+class CacheConfig:
+    # Appendix B: perform LPM over only state-modifying calls.
+    skip_stateless: bool = False
+    # Miss policy: "paper" replays the full sequence in a fresh sandbox when
+    # the LPM node has no snapshot (§3.2); "ancestor" (beyond-paper) replays
+    # from the deepest snapshotted ancestor instead.
+    miss_policy: str = "paper"
+    # §3.3 bound on cached sandboxes per task.
+    max_snapshots_per_task: int = 64
+    # Selective-snapshotting margin (exec_time > margin × snapshot overhead).
+    snapshot_margin: float = 1.0
+    # Disable snapshotting entirely (e.g. the SkyRL-SQL workload is
+    # stateless, §4.2: "sandbox snapshotting is unnecessary").
+    enable_snapshots: bool = True
+    # Persist TCGs to this directory periodically (GPU-server crash safety).
+    persist_dir: Optional[str] = None
+    persist_every_puts: int = 512
+
+
+@dataclass
+class PrefixMatchResponse:
+    """Wire-level response of POST /prefix_match."""
+
+    matched: int  # index of first unmatched call in the submitted sequence
+    exact: bool
+    node_id: int  # LPM node (0 == root)
+    # Deepest usable snapshot: at the LPM node ("paper") or at-or-above it
+    # ("ancestor").  ``snapshot_index`` = how many of the submitted calls lead
+    # to the snapshotted state (where client-side replay must start from).
+    snapshot: Optional[bytes] = None
+    snapshot_node_id: Optional[int] = None
+    snapshot_index: int = 0
+    ref_taken: bool = False
+
+    def to_wire(self) -> dict:
+        return {
+            "matched": self.matched,
+            "exact": self.exact,
+            "node_id": self.node_id,
+            "snapshot": self.snapshot,
+            "snapshot_node_id": self.snapshot_node_id,
+            "snapshot_index": self.snapshot_index,
+            "ref_taken": self.ref_taken,
+        }
+
+    @staticmethod
+    def from_wire(d: dict) -> "PrefixMatchResponse":
+        return PrefixMatchResponse(**d)
+
+
+@dataclass
+class PutResponse:
+    node_id: int
+    snapshot_wanted: bool  # server-side policy verdict: snapshot this node?
+    snapshot_stored: bool = False
+
+    def to_wire(self) -> dict:
+        return {
+            "node_id": self.node_id,
+            "snapshot_wanted": self.snapshot_wanted,
+            "snapshot_stored": self.snapshot_stored,
+        }
+
+    @staticmethod
+    def from_wire(d: dict) -> "PutResponse":
+        return PutResponse(**d)
+
+
+class CacheServer:
+    """Thread-safe, multi-task TVCache server (in-process form)."""
+
+    def __init__(self, config: Optional[CacheConfig] = None):
+        self.config = config or CacheConfig()
+        self.cost_model = SnapshotCostModel()
+        self.snapshot_policy = SnapshotPolicy(
+            cost_model=self.cost_model, margin=self.config.snapshot_margin
+        )
+        self.eviction_policy = EvictionPolicy(
+            max_snapshots=self.config.max_snapshots_per_task
+        )
+        self.stats = CacheStats()
+        self._tasks: Dict[str, ToolCallGraph] = {}
+        self._nodes: Dict[str, Dict[int, TCGNode]] = {}
+        self._lock = threading.Lock()
+        self._puts_since_persist = 0
+
+    # -- task / graph management --------------------------------------------
+
+    def tcg(self, task_id: str) -> ToolCallGraph:
+        with self._lock:
+            tcg = self._tasks.get(task_id)
+            if tcg is None:
+                tcg = ToolCallGraph(task_id, skip_stateless=self.config.skip_stateless)
+                self._tasks[task_id] = tcg
+                self._nodes[task_id] = {tcg.root.node_id: tcg.root}
+            return tcg
+
+    def _register(self, task_id: str, node: TCGNode) -> None:
+        self._nodes[task_id][node.node_id] = node
+
+    def node(self, task_id: str, node_id: int) -> TCGNode:
+        return self._nodes[task_id][node_id]
+
+    def task_ids(self) -> List[str]:
+        with self._lock:
+            return list(self._tasks)
+
+    # -- endpoints ------------------------------------------------------------
+
+    def get(
+        self, task_id: str, history: Sequence[ToolCall], call: ToolCall
+    ) -> Optional[ToolResult]:
+        """GET /get — exact-match lookup."""
+        t0 = time.perf_counter()
+        result = self.tcg(task_id).lookup(history, call)
+        dt = time.perf_counter() - t0
+        self.stats.record_lookup(
+            call.name,
+            hit=result is not None,
+            time_saved=(result.exec_time - dt) if result is not None else 0.0,
+            lookup_time=dt,
+        )
+        return result
+
+    def prefix_match(
+        self, task_id: str, query: Sequence[ToolCall]
+    ) -> PrefixMatchResponse:
+        """POST /prefix_match — LPM + sandbox reference acquisition (§3.4)."""
+        tcg = self.tcg(task_id)
+        lpm: LPMResult = tcg.lpm(query)
+        snap_node: Optional[TCGNode] = None
+        snapshot_index = 0
+        if self.config.miss_policy == "ancestor":
+            snap_node = tcg.deepest_snapshot(lpm.node)
+        elif lpm.node.has_snapshot:
+            snap_node = lpm.node
+        if snap_node is not None and snap_node.parent is None and not snap_node.has_snapshot:
+            snap_node = None  # root without snapshot: client starts clean
+        ref_taken = False
+        if snap_node is not None and snap_node.has_snapshot:
+            # Map the snapshot node back to an index in the submitted query:
+            # walk the query's stateful subsequence to the snapshot depth.
+            depth_needed = snap_node.depth
+            idx = 0
+            seen_stateful = 0
+            for i, call in enumerate(query[: lpm.matched_calls]):
+                if tcg._treat_stateful(call):
+                    seen_stateful += 1
+                if seen_stateful == depth_needed:
+                    idx = i + 1
+                    break
+            snapshot_index = idx if depth_needed > 0 else 0
+            tcg.incref(snap_node)
+            ref_taken = True
+            return PrefixMatchResponse(
+                matched=lpm.matched_calls,
+                exact=lpm.is_exact,
+                node_id=lpm.node.node_id,
+                snapshot=snap_node.snapshot,
+                snapshot_node_id=snap_node.node_id,
+                snapshot_index=snapshot_index,
+                ref_taken=ref_taken,
+            )
+        return PrefixMatchResponse(
+            matched=lpm.matched_calls, exact=lpm.is_exact, node_id=lpm.node.node_id
+        )
+
+    def decref(self, task_id: str, node_id: int) -> None:
+        """POST /decref — client finished forking the referenced sandbox."""
+        self.tcg(task_id).decref(self.node(task_id, node_id))
+
+    def put(
+        self,
+        task_id: str,
+        history: Sequence[ToolCall],
+        call: ToolCall,
+        result: ToolResult,
+        snapshot: Optional[bytes] = None,
+        est_snapshot_nbytes: int = 0,
+    ) -> PutResponse:
+        """PUT /put — record an executed tool call.
+
+        Two-phase snapshotting: the client first PUTs without a snapshot and
+        learns from ``snapshot_wanted`` whether the server-side selective
+        policy wants one (the client then serializes and re-PUTs).  A client
+        that already has the blob can send it in one shot.
+        """
+        tcg = self.tcg(task_id)
+        node, i = tcg.walk(history)
+        if i < len(history):
+            # The rollout's history diverged from the graph (possible only if
+            # subtree pruning removed it); re-insert the missing stateful spine.
+            for c in history[i:]:
+                node = tcg.insert(node, c, ToolResult(output=None, exec_time=0.0))
+                self._register(task_id, node)
+        new_node = tcg.insert(node, call, result, snapshot=snapshot)
+        self._register(task_id, new_node)
+        wanted = (
+            self.config.enable_snapshots
+            and call.is_stateful
+            and not new_node.has_snapshot
+            and self.snapshot_policy.should_snapshot(
+                result.exec_time, est_snapshot_nbytes
+            )
+        )
+        if snapshot is not None:
+            self.eviction_policy.enforce(tcg)
+        self._maybe_persist(task_id)
+        return PutResponse(
+            node_id=new_node.node_id,
+            snapshot_wanted=wanted,
+            snapshot_stored=snapshot is not None and new_node.has_snapshot,
+        )
+
+    def attach_snapshot(self, task_id: str, node_id: int, snapshot: bytes) -> None:
+        """PUT /snapshot — second phase of two-phase snapshotting."""
+        tcg = self.tcg(task_id)
+        tcg.attach_snapshot(self.node(task_id, node_id), snapshot)
+        self.eviction_policy.enforce(tcg)
+
+    # -- stats / visualization -------------------------------------------------
+
+    def stats_summary(self) -> dict:
+        out = self.stats.summary()
+        with self._lock:
+            out["tasks"] = len(self._tasks)
+            out["nodes"] = sum(len(t) for t in self._tasks.values())
+            out["snapshots"] = sum(
+                len(t.snapshot_nodes()) for t in self._tasks.values()
+            )
+            out["snapshot_bytes"] = sum(
+                t.snapshot_bytes() for t in self._tasks.values()
+            )
+        return out
+
+    def visualize(self, task_id: str) -> str:
+        return self.tcg(task_id).to_dot()
+
+    # -- persistence -------------------------------------------------------------
+
+    def _maybe_persist(self, task_id: str) -> None:
+        if self.config.persist_dir is None:
+            return
+        with self._lock:
+            self._puts_since_persist += 1
+            due = self._puts_since_persist >= self.config.persist_every_puts
+            if due:
+                self._puts_since_persist = 0
+        if due:
+            self.persist()
+
+    def persist(self) -> None:
+        if self.config.persist_dir is None:
+            return
+        os.makedirs(self.config.persist_dir, exist_ok=True)
+        for task_id in self.task_ids():
+            blob = self.tcg(task_id).to_bytes()
+            safe = task_id.replace("/", "_")
+            path = os.path.join(self.config.persist_dir, f"{safe}.tcg")
+            tmp = path + ".tmp"
+            with open(tmp, "wb") as f:
+                f.write(blob)
+            os.replace(tmp, path)
+
+    def load(self, persist_dir: Optional[str] = None) -> int:
+        """Restore persisted TCGs (crash recovery).  Returns #tasks loaded."""
+        d = persist_dir or self.config.persist_dir
+        if d is None or not os.path.isdir(d):
+            return 0
+        n = 0
+        for fname in os.listdir(d):
+            if not fname.endswith(".tcg"):
+                continue
+            with open(os.path.join(d, fname), "rb") as f:
+                tcg = ToolCallGraph.from_bytes(f.read())
+            with self._lock:
+                self._tasks[tcg.task_id] = tcg
+                self._nodes[tcg.task_id] = {n_.node_id: n_ for n_ in tcg.nodes()}
+            n += 1
+        return n

@@ -1,0 +1,105 @@
+"""Clock abstractions for TVCache.
+
+The paper measures tool-execution latencies of seconds to minutes (Docker
+builds, SQL round-trips, video RPCs).  Reproducing those wall-clock numbers
+deterministically on a CPU container requires a *virtual clock*: sandboxes
+declare the cost of each tool execution and charge it to the clock instead of
+sleeping.  The cache-server microbenchmarks (paper Fig. 8a) use the real
+clock, since they measure our actual server implementation.
+
+Both clocks share one interface so the executor, the snapshot policy, and the
+benchmarks are clock-agnostic.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from abc import ABC, abstractmethod
+
+
+class Clock(ABC):
+    """Monotonic clock interface (seconds)."""
+
+    @abstractmethod
+    def now(self) -> float:
+        ...
+
+    @abstractmethod
+    def charge(self, seconds: float) -> None:
+        """Account for `seconds` of work (sleeps or advances virtual time)."""
+
+    def timer(self) -> "_Timer":
+        return _Timer(self)
+
+
+class _Timer:
+    """Context manager measuring elapsed clock time."""
+
+    def __init__(self, clock: Clock):
+        self._clock = clock
+        self.elapsed = 0.0
+
+    def __enter__(self) -> "_Timer":
+        self._t0 = self._clock.now()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.elapsed = self._clock.now() - self._t0
+
+
+class RealClock(Clock):
+    """Wall-clock time; ``charge`` really sleeps (scaled)."""
+
+    def __init__(self, time_scale: float = 1.0):
+        # time_scale < 1 compresses simulated latencies (e.g. 1e-3 turns a
+        # simulated 8.7 s tool call into an 8.7 ms sleep) while keeping the
+        # *relative* latency structure intact.
+        self.time_scale = time_scale
+
+    def now(self) -> float:
+        return time.monotonic()
+
+    def charge(self, seconds: float) -> None:
+        if seconds > 0:
+            time.sleep(seconds * self.time_scale)
+
+
+class VirtualClock(Clock):
+    """Deterministic, thread-safe virtual clock.
+
+    Each thread observes a private offset on top of the shared base so that
+    parallel rollouts accumulate *their own* timelines (as parallel rollouts
+    do on real hardware) while `global_advance` models barrier-style steps.
+    """
+
+    def __init__(self):
+        self._base = 0.0
+        self._lock = threading.Lock()
+        self._local = threading.local()
+
+    def _offset(self) -> float:
+        return getattr(self._local, "offset", 0.0)
+
+    def now(self) -> float:
+        with self._lock:
+            return self._base + self._offset()
+
+    def charge(self, seconds: float) -> None:
+        if seconds < 0:
+            raise ValueError(f"negative charge: {seconds}")
+        self._local.offset = self._offset() + seconds
+
+    def thread_elapsed(self) -> float:
+        """Time charged by the calling thread since its last reset."""
+        return self._offset()
+
+    def reset_thread(self) -> float:
+        """Zero the calling thread's private timeline, returning its value."""
+        elapsed = self._offset()
+        self._local.offset = 0.0
+        return elapsed
+
+    def global_advance(self, seconds: float) -> None:
+        with self._lock:
+            self._base += seconds

@@ -1,0 +1,212 @@
+"""Client-side tool-call execution through TVCache (paper §3.4, tvclient).
+
+``ToolCallExecutor`` is what the RL rollout loop integrates with: before
+executing a tool call, the rollout serializes the call, concatenates it with
+its prior tool history and asks the cache for an exact match (`/get`).  On a
+hit the cached value returns immediately — no sandbox is touched.  On a miss,
+the executor obtains a sandbox whose state matches the rollout's tool history
+(live session sandbox → prefix-match fork → clean root + replay, in that
+order of preference) and executes the call in it, then PUTs the result (and,
+if the server's selective policy wants one, a snapshot) back to the cache.
+
+Sessions are lazy about sandboxes: a rollout whose every call hits the cache
+never allocates one (this is where the big wins of Fig. 7 come from).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+from .cache import CacheServer, PrefixMatchResponse
+from .sandbox import SandboxManager, ToolExecutionEnvironment
+from .tcg import ToolCall, ToolResult
+
+
+@dataclass
+class ExecutionOutcome:
+    """What happened for one tool call — consumed by benchmarks/telemetry."""
+
+    result: ToolResult
+    hit: bool
+    replayed_calls: int = 0
+    forked: bool = False
+    tool_time: float = 0.0  # clock time this call cost the rollout
+
+
+class RolloutSession:
+    """Per-rollout cursor: tool history + (lazily materialized) sandbox."""
+
+    def __init__(self, executor: "ToolCallExecutor", task_id: str):
+        self.executor = executor
+        self.task_id = task_id
+        self.history: List[ToolCall] = []
+        self.sandbox: Optional[ToolExecutionEnvironment] = None
+        # Index into ``history``: the sandbox's state corresponds to
+        # ``history[:sandbox_pos]`` having been executed.
+        self.sandbox_pos: int = 0
+        self.tool_time: float = 0.0
+        self.calls: int = 0
+        self.hits: int = 0
+
+    def execute(self, call: ToolCall) -> ToolResult:
+        return self.executor.execute(self, call).result
+
+    def execute_detailed(self, call: ToolCall) -> ExecutionOutcome:
+        return self.executor.execute(self, call)
+
+    def close(self) -> None:
+        if self.sandbox is not None:
+            self.executor.manager.release(self.sandbox)
+            self.sandbox = None
+
+
+class ToolCallExecutor:
+    """The tvclient-side executor binding a cache backend to sandboxes."""
+
+    def __init__(
+        self,
+        backend: CacheServer,
+        manager: SandboxManager,
+        annotate: Optional[Callable[[ToolCall], Optional[bool]]] = None,
+        enabled: bool = True,
+    ):
+        self.backend = backend
+        self.manager = manager
+        self.annotate = annotate
+        #: disabling turns the executor into the cacheless baseline — every
+        #: call executes in the session sandbox.
+        self.enabled = enabled
+
+    def session(self, task_id: str) -> RolloutSession:
+        return RolloutSession(self, task_id)
+
+    # ------------------------------------------------------------------
+
+    def _annotated(self, call: ToolCall) -> ToolCall:
+        if call.mutates is None and self.annotate is not None:
+            return ToolCall(call.name, call.args, self.annotate(call))
+        return call
+
+    def execute(self, session: RolloutSession, call: ToolCall) -> ExecutionOutcome:
+        call = self._annotated(call)
+        clock = self.manager.clock
+        t_start = clock.now()
+
+        if not self.enabled:
+            outcome = self._execute_miss(session, call, charge_lookup=False)
+            session.history.append(call)
+            session.calls += 1
+            outcome.tool_time = clock.now() - t_start
+            session.tool_time += outcome.tool_time
+            return outcome
+
+        # 1. Exact-match lookup (GET /get).  Charge the real lookup latency
+        #    to the rollout clock — this is the <10 ms cache-miss overhead of
+        #    §4.5.
+        t0 = time.perf_counter()
+        cached = self.backend.get(session.task_id, session.history, call)
+        clock.charge(time.perf_counter() - t0)
+
+        if cached is not None:
+            session.history.append(call)
+            session.calls += 1
+            session.hits += 1
+            outcome = ExecutionOutcome(result=cached, hit=True)
+            outcome.tool_time = clock.now() - t_start
+            session.tool_time += outcome.tool_time
+            return outcome
+
+        outcome = self._execute_miss(session, call, charge_lookup=True)
+        session.history.append(call)
+        session.calls += 1
+        outcome.tool_time = clock.now() - t_start
+        session.tool_time += outcome.tool_time
+        return outcome
+
+    # ------------------------------------------------------------------
+
+    def _execute_miss(
+        self, session: RolloutSession, call: ToolCall, charge_lookup: bool
+    ) -> ExecutionOutcome:
+        """Bring a sandbox to ``state(history)`` and execute ``call`` in it."""
+        replayed = 0
+        forked = False
+        acquired_root = False
+
+        if session.sandbox is None or session.sandbox_pos > len(session.history):
+            env, start_pos, forked = self._acquire_sandbox(session, charge_lookup)
+            acquired_root = not forked
+            session.sandbox = env
+            session.sandbox_pos = start_pos
+
+        # Replay the gap: (stateful) calls between the sandbox's state and the
+        # rollout's logical position.  Stateless calls cannot change state and
+        # are skipped during replay.
+        env = session.sandbox
+        for c in session.history[session.sandbox_pos : ]:
+            c = self._annotated(c)
+            if c.mutates is False:
+                continue
+            env.execute(c)
+            replayed += 1
+        session.sandbox_pos = len(session.history)
+
+        result = env.execute(call)
+        if self.enabled:
+            self._put(session, call, result, env)
+            self.backend.stats.record_miss_kind(
+                partial=not acquired_root, replayed=replayed
+            )
+        session.sandbox_pos = len(session.history) + 1
+        return ExecutionOutcome(
+            result=result, hit=False, replayed_calls=replayed, forked=forked
+        )
+
+    def _acquire_sandbox(
+        self, session: RolloutSession, use_cache: bool
+    ) -> tuple:
+        """Find the cheapest way to a sandbox consistent with the history."""
+        if use_cache and self.enabled and session.history:
+            t0 = time.perf_counter()
+            resp: PrefixMatchResponse = self.backend.prefix_match(
+                session.task_id, session.history
+            )
+            self.manager.clock.charge(time.perf_counter() - t0)
+            if resp.snapshot is not None:
+                env = self.manager.acquire_fork(resp.snapshot_node_id, resp.snapshot)
+                if resp.ref_taken:
+                    self.backend.decref(session.task_id, resp.snapshot_node_id)
+                if env is not None:
+                    return env, resp.snapshot_index, True
+            elif resp.ref_taken:
+                self.backend.decref(session.task_id, resp.snapshot_node_id)
+        # Paper miss policy fallback: clean sandbox, replay the full history.
+        env = self.manager.acquire_root()
+        return env, 0, False
+
+    def _put(
+        self,
+        session: RolloutSession,
+        call: ToolCall,
+        result: ToolResult,
+        env: ToolExecutionEnvironment,
+    ) -> None:
+        est = 0
+        if hasattr(env, "estimate_snapshot_nbytes"):
+            est = env.estimate_snapshot_nbytes()
+        resp = self.backend.put(
+            session.task_id,
+            session.history,
+            call,
+            result,
+            snapshot=None,
+            est_snapshot_nbytes=est,
+        )
+        if resp.snapshot_wanted:
+            # Snapshot on the critical path (§3.3) …
+            blob = self.manager.take_snapshot(env)
+            self.backend.attach_snapshot(session.task_id, resp.node_id, blob)
+            # … but instantiate the reusable fork in the background.
+            self.manager.schedule_background_fork(resp.node_id, blob)

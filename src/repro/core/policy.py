@@ -1,0 +1,110 @@
+"""Selective snapshotting and eviction policies (paper §3.3).
+
+*Selective snapshotting*: snapshot a node's sandbox only when the expected
+cost of re-executing its tool exceeds the (serialize + restore) overhead of
+the snapshot.  This naturally snapshots test-suite runs and compiles but not
+``cat foo.py``.
+
+*Eviction*: each task bounds its number of cached sandboxes.  When over
+budget, prune the snapshots with the lowest expected reuse; the score favours
+keeping shallow nodes (common prefixes shared by many rollouts) and nodes with
+many children / many historical hits.  Nodes with a nonzero reference count
+(a fork in flight, §3.4) are never evicted.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import List
+
+from .serialize import SnapshotCostModel
+from .tcg import TCGNode, ToolCallGraph
+
+
+@dataclass
+class SnapshotPolicy:
+    """Decide whether a freshly executed tool call deserves a snapshot."""
+
+    cost_model: SnapshotCostModel
+    # Extra margin: snapshot only if re-execution costs at least this factor
+    # more than the snapshotting overhead.
+    margin: float = 1.0
+    # Hard floor — never snapshot tools cheaper than this (seconds).
+    min_exec_time: float = 5e-3
+
+    def should_snapshot(self, exec_time: float, est_snapshot_nbytes: int) -> bool:
+        if exec_time < self.min_exec_time:
+            return False
+        overhead = self.cost_model.estimate(est_snapshot_nbytes)
+        return exec_time > self.margin * overhead
+
+
+@dataclass
+class EvictionPolicy:
+    """Bound the number of cached sandboxes per task (§3.3).
+
+    Score = expected time saved by keeping the snapshot, discounted by depth
+    (deep nodes are reached by fewer rollouts) and boosted by fan-out (a node
+    with many children is a shared prefix whose snapshot serves many paths).
+    """
+
+    max_snapshots: int = 64
+    depth_discount: float = 0.85
+
+    def score(self, node: TCGNode) -> float:
+        reuse = 1.0 + node.hits + 2.0 * len(node.children)
+        saved = node.exec_time + sum(c.exec_time for c in node.children.values())
+        return reuse * max(saved, 1e-6) * (self.depth_discount ** node.depth)
+
+    def select_victims(self, tcg: ToolCallGraph) -> List[TCGNode]:
+        """Snapshots to drop so the task returns under budget.
+
+        Only refcount-zero sandboxes are eligible (§3.4 concurrency control).
+        """
+        snap_nodes = tcg.snapshot_nodes()
+        excess = len(snap_nodes) - self.max_snapshots
+        if excess <= 0:
+            return []
+        eligible = [n for n in snap_nodes if n.refcount == 0]
+        eligible.sort(key=self.score)
+        return eligible[:excess]
+
+    def enforce(self, tcg: ToolCallGraph) -> int:
+        victims = self.select_victims(tcg)
+        for node in victims:
+            tcg.drop_snapshot(node)
+        return len(victims)
+
+
+def expected_replay_cost(node: TCGNode) -> float:
+    """Cost of rebuilding ``node``'s sandbox state from the nearest snapshot.
+
+    Used by benchmarks and the (beyond-paper) ancestor-replay miss policy to
+    reason about what a snapshot is worth: the sum of exec times along the
+    path from the deepest snapshotted ancestor down to ``node``.
+    """
+    cost = 0.0
+    cur = node
+    while cur is not None and cur.parent is not None and not cur.has_snapshot:
+        cost += cur.exec_time
+        cur = cur.parent
+    return cost
+
+
+def tcg_entropy(tcg: ToolCallGraph) -> float:
+    """Branching entropy of the TCG — a diagnostic of rollout diversity.
+
+    High entropy ⇒ rollouts diverge early ⇒ low hit rates (terminal-bench);
+    low entropy ⇒ rollouts share long prefixes ⇒ high hit rates (EgoSchema).
+    """
+    h = 0.0
+    for node in tcg.nodes():
+        kids = node.children.values()
+        total = sum(1 + k.hits for k in kids)
+        if total <= 0 or len(node.children) <= 1:
+            continue
+        for k in kids:
+            p = (1 + k.hits) / total
+            h -= p * math.log2(p)
+    return h

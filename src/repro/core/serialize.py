@@ -1,0 +1,88 @@
+"""Snapshot serialization for TVCache.
+
+Sandbox snapshots are the dominant storage cost of the cache (paper §3.3), so
+they are msgpack-encoded and zstd-compressed.  The module also exposes the
+calibrated cost model used by the selective-snapshotting policy: serialize /
+restore cost is modelled as ``a + b * nbytes`` with coefficients updated by an
+EMA over observed (bytes, seconds) samples — the TPU-host analogue of the
+paper's Docker commit/restore overhead measurement.
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass
+
+import msgpack
+import zstandard as zstd
+
+# zstd (de)compression contexts are NOT thread-safe; snapshots are taken on
+# rollout threads while background fork threads restore them concurrently
+# (§3.3 background instantiation), so keep one context per thread.
+_tls = threading.local()
+
+
+def _compressor() -> zstd.ZstdCompressor:
+    c = getattr(_tls, "compressor", None)
+    if c is None:
+        c = _tls.compressor = zstd.ZstdCompressor(level=3)
+    return c
+
+
+def _decompressor() -> zstd.ZstdDecompressor:
+    d = getattr(_tls, "decompressor", None)
+    if d is None:
+        d = _tls.decompressor = zstd.ZstdDecompressor()
+    return d
+
+
+def dumps(obj) -> bytes:
+    """Serialize an arbitrary msgpack-able object to compressed bytes."""
+    packed = msgpack.packb(obj, use_bin_type=True)
+    return _compressor().compress(packed)
+
+
+def loads(blob: bytes):
+    return msgpack.unpackb(_decompressor().decompress(blob), raw=False)
+
+
+@dataclass
+class CostSample:
+    nbytes: int
+    seconds: float
+
+
+class SnapshotCostModel:
+    """EMA-calibrated linear cost model for snapshot serialize+restore.
+
+    ``estimate(nbytes)`` returns the expected one-time overhead (seconds) of
+    storing *and later restoring* a snapshot of the given size.  The selective
+    snapshotting policy compares this against the tool's execution time.
+    """
+
+    def __init__(
+        self,
+        base_seconds: float = 1e-3,
+        seconds_per_byte: float = 2e-9,
+        ema: float = 0.2,
+    ):
+        self.base_seconds = base_seconds
+        self.seconds_per_byte = seconds_per_byte
+        self._ema = ema
+        self._lock = threading.Lock()
+        self.n_samples = 0
+
+    def observe(self, sample: CostSample) -> None:
+        """Update coefficients from an observed serialize+restore timing."""
+        if sample.nbytes <= 0:
+            return
+        with self._lock:
+            obs_rate = max(sample.seconds - self.base_seconds, 0.0) / sample.nbytes
+            self.seconds_per_byte = (
+                (1 - self._ema) * self.seconds_per_byte + self._ema * obs_rate
+            )
+            self.n_samples += 1
+
+    def estimate(self, nbytes: int) -> float:
+        # serialize + restore ≈ 2× one-way cost.
+        return 2.0 * (self.base_seconds + self.seconds_per_byte * nbytes)

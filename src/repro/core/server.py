@@ -1,0 +1,229 @@
+"""HTTP form of the TVCache server (paper Fig. 4, §3.4).
+
+The server exposes the cache over HTTP so the sandbox host and the training
+loop can live on different machines (as in the paper's terminal-bench and
+EgoSchema setups).  Endpoints mirror the paper:
+
+* ``POST /get``            — exact-match lookup (body-carrying, so POST)
+* ``POST /prefix_match``   — longest-prefix match (+ sandbox reference)
+* ``PUT  /put``            — insert an executed call
+* ``PUT  /snapshot``       — attach a snapshot (two-phase snapshotting)
+* ``POST /decref``         — release a sandbox reference
+* ``GET  /stats``          — cache-hit statistics
+* ``GET  /visualize``      — GraphViz dump of a task's TCG
+
+Payloads are msgpack (snapshots are raw bytes — JSON would bloat them).
+``HTTPCacheClient`` exposes the exact same Python surface as the in-process
+``CacheServer`` so ``ToolCallExecutor`` is transport-agnostic.
+"""
+
+from __future__ import annotations
+
+import threading
+import urllib.parse
+import urllib.request
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Optional, Sequence
+
+import msgpack
+
+from .cache import CacheConfig, CacheServer, PrefixMatchResponse, PutResponse
+from .stats import CacheStats
+from .tcg import ToolCall, ToolResult
+
+
+def _pack(obj) -> bytes:
+    return msgpack.packb(obj, use_bin_type=True)
+
+
+def _unpack(blob: bytes):
+    return msgpack.unpackb(blob, raw=False)
+
+
+class _Handler(BaseHTTPRequestHandler):
+    server_version = "TVCache/1.0"
+    cache: CacheServer  # injected by make_http_server
+
+    def log_message(self, *args) -> None:  # silence request logging
+        pass
+
+    # -- helpers -----------------------------------------------------------
+
+    def _body(self):
+        length = int(self.headers.get("Content-Length", 0))
+        return _unpack(self.rfile.read(length)) if length else {}
+
+    def _reply(self, obj, status: int = 200) -> None:
+        blob = _pack(obj)
+        self.send_response(status)
+        self.send_header("Content-Type", "application/msgpack")
+        self.send_header("Content-Length", str(len(blob)))
+        self.end_headers()
+        self.wfile.write(blob)
+
+    # -- routes ------------------------------------------------------------
+
+    def do_GET(self) -> None:
+        parsed = urllib.parse.urlparse(self.path)
+        if parsed.path == "/stats":
+            self._reply(self.cache.stats_summary())
+        elif parsed.path == "/visualize":
+            q = urllib.parse.parse_qs(parsed.query)
+            self._reply({"dot": self.cache.visualize(q["task_id"][0])})
+        elif parsed.path == "/health":
+            self._reply({"ok": True})
+        else:
+            self._reply({"error": f"unknown path {parsed.path}"}, status=404)
+
+    def do_POST(self) -> None:
+        body = self._body()
+        if self.path == "/get":
+            res = self.cache.get(
+                body["task_id"],
+                [ToolCall.from_wire(c) for c in body["history"]],
+                ToolCall.from_wire(body["call"]),
+            )
+            self._reply({"result": res.to_wire() if res else None})
+        elif self.path == "/prefix_match":
+            resp = self.cache.prefix_match(
+                body["task_id"], [ToolCall.from_wire(c) for c in body["query"]]
+            )
+            self._reply(resp.to_wire())
+        elif self.path == "/decref":
+            self.cache.decref(body["task_id"], body["node_id"])
+            self._reply({"ok": True})
+        else:
+            self._reply({"error": f"unknown path {self.path}"}, status=404)
+
+    def do_PUT(self) -> None:
+        body = self._body()
+        if self.path == "/put":
+            resp = self.cache.put(
+                body["task_id"],
+                [ToolCall.from_wire(c) for c in body["history"]],
+                ToolCall.from_wire(body["call"]),
+                ToolResult.from_wire(body["result"]),
+                snapshot=body.get("snapshot"),
+                est_snapshot_nbytes=body.get("est_snapshot_nbytes", 0),
+            )
+            self._reply(resp.to_wire())
+        elif self.path == "/snapshot":
+            self.cache.attach_snapshot(
+                body["task_id"], body["node_id"], body["snapshot"]
+            )
+            self._reply({"ok": True})
+        else:
+            self._reply({"error": f"unknown path {self.path}"}, status=404)
+
+
+class TVCacheHTTPServer:
+    """A running TVCache HTTP server (one shard)."""
+
+    def __init__(self, config: Optional[CacheConfig] = None, port: int = 0):
+        self.cache = CacheServer(config)
+        handler = type("BoundHandler", (_Handler,), {"cache": self.cache})
+        self.httpd = ThreadingHTTPServer(("127.0.0.1", port), handler)
+        self.port = self.httpd.server_address[1]
+        self._thread = threading.Thread(target=self.httpd.serve_forever, daemon=True)
+
+    def start(self) -> "TVCacheHTTPServer":
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self.httpd.shutdown()
+        self.httpd.server_close()
+
+    @property
+    def address(self) -> str:
+        return f"http://127.0.0.1:{self.port}"
+
+
+class HTTPCacheClient:
+    """Drop-in CacheServer replacement speaking to a remote shard."""
+
+    def __init__(self, address: str, timeout: float = 30.0):
+        self.address = address.rstrip("/")
+        self.timeout = timeout
+        self.stats = CacheStats()  # client-side mirror for miss-kind records
+
+    # -- transport ----------------------------------------------------------
+
+    def _request(self, method: str, path: str, body: Optional[dict] = None):
+        data = _pack(body) if body is not None else None
+        req = urllib.request.Request(
+            self.address + path, data=data, method=method,
+            headers={"Content-Type": "application/msgpack"},
+        )
+        with urllib.request.urlopen(req, timeout=self.timeout) as resp:
+            return _unpack(resp.read())
+
+    # -- CacheServer surface --------------------------------------------------
+
+    def get(
+        self, task_id: str, history: Sequence[ToolCall], call: ToolCall
+    ) -> Optional[ToolResult]:
+        out = self._request(
+            "POST",
+            "/get",
+            {
+                "task_id": task_id,
+                "history": [c.to_wire() for c in history],
+                "call": call.to_wire(),
+            },
+        )
+        hit = out["result"] is not None
+        res = ToolResult.from_wire(out["result"]) if hit else None
+        self.stats.record_lookup(call.name, hit, res.exec_time if res else 0.0)
+        return res
+
+    def prefix_match(
+        self, task_id: str, query: Sequence[ToolCall]
+    ) -> PrefixMatchResponse:
+        out = self._request(
+            "POST",
+            "/prefix_match",
+            {"task_id": task_id, "query": [c.to_wire() for c in query]},
+        )
+        return PrefixMatchResponse.from_wire(out)
+
+    def decref(self, task_id: str, node_id: int) -> None:
+        self._request("POST", "/decref", {"task_id": task_id, "node_id": node_id})
+
+    def put(
+        self,
+        task_id: str,
+        history: Sequence[ToolCall],
+        call: ToolCall,
+        result: ToolResult,
+        snapshot: Optional[bytes] = None,
+        est_snapshot_nbytes: int = 0,
+    ) -> PutResponse:
+        out = self._request(
+            "PUT",
+            "/put",
+            {
+                "task_id": task_id,
+                "history": [c.to_wire() for c in history],
+                "call": call.to_wire(),
+                "result": result.to_wire(),
+                "snapshot": snapshot,
+                "est_snapshot_nbytes": est_snapshot_nbytes,
+            },
+        )
+        return PutResponse.from_wire(out)
+
+    def attach_snapshot(self, task_id: str, node_id: int, snapshot: bytes) -> None:
+        self._request(
+            "PUT",
+            "/snapshot",
+            {"task_id": task_id, "node_id": node_id, "snapshot": snapshot},
+        )
+
+    def stats_summary(self) -> dict:
+        return self._request("GET", "/stats")
+
+    def visualize(self, task_id: str) -> str:
+        return self._request(
+            "GET", f"/visualize?task_id={urllib.parse.quote(task_id)}"
+        )["dot"]

@@ -1,0 +1,97 @@
+"""Task-sharded cache deployment (paper §4.5, Fig. 8a).
+
+"Since each task's TCG is independent, TVCACHE shards the cache servers by
+task ID, enabling near-linear throughput scaling."  The router hashes the
+task ID to a shard; because every operation carries a task ID and TCGs never
+interact, no cross-shard coordination exists.  Works over both in-process
+``CacheServer`` shards (microbenchmarks) and HTTP shards (deployment).
+"""
+
+from __future__ import annotations
+
+import hashlib
+from typing import List, Optional, Sequence
+
+from .cache import CacheConfig, CacheServer, PrefixMatchResponse, PutResponse
+from .server import HTTPCacheClient, TVCacheHTTPServer
+from .stats import CacheStats
+from .tcg import ToolCall, ToolResult
+
+
+def _shard_of(task_id: str, n: int) -> int:
+    digest = hashlib.sha1(task_id.encode()).digest()
+    return int.from_bytes(digest[:8], "big") % n
+
+
+class ShardedCacheClient:
+    """Routes every cache operation to ``shards[hash(task_id) % n]``.
+
+    Presents the same surface as ``CacheServer`` so it can be handed straight
+    to ``ToolCallExecutor``.
+    """
+
+    def __init__(self, shards: Sequence):
+        if not shards:
+            raise ValueError("need at least one shard")
+        self.shards = list(shards)
+        self.stats = CacheStats()
+
+    def _route(self, task_id: str):
+        return self.shards[_shard_of(task_id, len(self.shards))]
+
+    # -- CacheServer surface -------------------------------------------------
+
+    def get(self, task_id: str, history, call) -> Optional[ToolResult]:
+        res = self._route(task_id).get(task_id, history, call)
+        self.stats.record_lookup(call.name, res is not None,
+                                 res.exec_time if res else 0.0)
+        return res
+
+    def prefix_match(self, task_id: str, query) -> PrefixMatchResponse:
+        return self._route(task_id).prefix_match(task_id, query)
+
+    def decref(self, task_id: str, node_id: int) -> None:
+        self._route(task_id).decref(task_id, node_id)
+
+    def put(self, task_id: str, history, call, result,
+            snapshot=None, est_snapshot_nbytes: int = 0) -> PutResponse:
+        return self._route(task_id).put(
+            task_id, history, call, result,
+            snapshot=snapshot, est_snapshot_nbytes=est_snapshot_nbytes,
+        )
+
+    def attach_snapshot(self, task_id: str, node_id: int, snapshot: bytes) -> None:
+        self._route(task_id).attach_snapshot(task_id, node_id, snapshot)
+
+    def stats_summary(self) -> dict:
+        merged: dict = {}
+        for shard in self.shards:
+            for k, v in shard.stats_summary().items():
+                if isinstance(v, (int, float)):
+                    merged[k] = merged.get(k, 0) + v
+        merged["shards"] = len(self.shards)
+        if merged.get("lookups"):
+            merged["hit_rate"] = merged.get("hits", 0) / merged["lookups"]
+        return merged
+
+
+def make_inprocess_shards(
+    n_shards: int, config: Optional[CacheConfig] = None
+) -> ShardedCacheClient:
+    return ShardedCacheClient([CacheServer(config) for _ in range(n_shards)])
+
+
+class ShardedHTTPDeployment:
+    """Spin up N HTTP cache servers + a sharded client over them."""
+
+    def __init__(self, n_shards: int, config: Optional[CacheConfig] = None):
+        self.servers: List[TVCacheHTTPServer] = [
+            TVCacheHTTPServer(config).start() for _ in range(n_shards)
+        ]
+        self.client = ShardedCacheClient(
+            [HTTPCacheClient(s.address) for s in self.servers]
+        )
+
+    def stop(self) -> None:
+        for s in self.servers:
+            s.stop()

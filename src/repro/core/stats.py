@@ -1,0 +1,95 @@
+"""Cache statistics (hit rates, time saved) — feeds Fig. 5/12-style reports
+and the eviction policy (§3.4: "the server collects cache-hit statistics,
+which are used by the pruning policy")."""
+
+from __future__ import annotations
+
+import collections
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+
+@dataclass
+class ToolStats:
+    lookups: int = 0
+    hits: int = 0
+    exec_time_saved: float = 0.0
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.lookups if self.lookups else 0.0
+
+
+class CacheStats:
+    """Thread-safe counters, bucketed per epoch and per tool."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.lookups = 0
+        self.hits = 0
+        self.lpm_partial = 0  # misses that still reused a cached prefix
+        self.full_misses = 0  # misses executed from a clean sandbox
+        self.replayed_calls = 0
+        self.exec_time_saved = 0.0
+        self.lookup_time = 0.0
+        self.per_tool: Dict[str, ToolStats] = collections.defaultdict(ToolStats)
+        self.per_epoch: Dict[int, ToolStats] = collections.defaultdict(ToolStats)
+        self._epoch = 0
+
+    def set_epoch(self, epoch: int) -> None:
+        with self._lock:
+            self._epoch = epoch
+
+    def record_lookup(
+        self, tool: str, hit: bool, time_saved: float = 0.0, lookup_time: float = 0.0
+    ) -> None:
+        with self._lock:
+            self.lookups += 1
+            self.lookup_time += lookup_time
+            ts, es = self.per_tool[tool], self.per_epoch[self._epoch]
+            ts.lookups += 1
+            es.lookups += 1
+            if hit:
+                self.hits += 1
+                self.exec_time_saved += time_saved
+                ts.hits += 1
+                ts.exec_time_saved += time_saved
+                es.hits += 1
+                es.exec_time_saved += time_saved
+
+    def record_miss_kind(self, partial: bool, replayed: int = 0) -> None:
+        with self._lock:
+            if partial:
+                self.lpm_partial += 1
+            else:
+                self.full_misses += 1
+            self.replayed_calls += replayed
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.lookups if self.lookups else 0.0
+
+    def epoch_hit_rates(self) -> List[float]:
+        with self._lock:
+            epochs = sorted(self.per_epoch)
+            return [self.per_epoch[e].hit_rate for e in epochs]
+
+    def tool_hit_rates(self) -> Dict[str, float]:
+        with self._lock:
+            return {k: v.hit_rate for k, v in sorted(self.per_tool.items())}
+
+    def summary(self) -> dict:
+        with self._lock:
+            return {
+                "lookups": self.lookups,
+                "hits": self.hits,
+                "hit_rate": self.hits / self.lookups if self.lookups else 0.0,
+                "lpm_partial": self.lpm_partial,
+                "full_misses": self.full_misses,
+                "replayed_calls": self.replayed_calls,
+                "exec_time_saved_s": round(self.exec_time_saved, 6),
+                "mean_lookup_ms": (
+                    round(1e3 * self.lookup_time / self.lookups, 4) if self.lookups else 0.0
+                ),
+            }

@@ -1,0 +1,365 @@
+"""Tool Call Graph (TCG) — the data structure at the heart of TVCACHE (§3.1).
+
+For each task (prompt) ``p`` the cache maintains a rooted trie ``G(p)`` whose
+root-to-node paths are tool-call sequences observed across rollouts.  Each
+node stores ``(t, r, s)``: the tool descriptor, its execution result, and an
+*optional* serialized sandbox snapshot (selective snapshotting, §3.3).
+
+Lookups are longest-prefix matches (§3.2): a *hit* requires the rollout's full
+tool history to match a cached path — guaranteeing the sandbox state is
+identical to the one that produced the cached result — while a *partial*
+match identifies the deepest reusable sandbox state.
+
+Stateful prefix matching (Appendix B): tools annotated as state-preserving
+(``ToolCall.mutates == False``) are skipped during the trie walk and their
+results are cached in a per-node side table, keyed by descriptor.  This is the
+paper's optimization of indexing TCG nodes only by state-*modifying* calls.
+"""
+
+from __future__ import annotations
+
+import itertools
+import json
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+
+from . import serialize
+
+
+# --------------------------------------------------------------------------
+# Tool calls and results
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ToolCall:
+    """A tool invocation: name + arguments (+ optional statefulness hint).
+
+    ``mutates=None`` means "unknown"; TVCache conservatively treats unknown
+    tools as state-mutating (paper Appendix B: safe default for open tool
+    spaces such as bash).
+    """
+
+    name: str
+    args: Tuple = ()
+    mutates: Optional[bool] = None
+
+    @property
+    def descriptor(self) -> str:
+        """Canonical serialization of (name, args) used as the trie key."""
+        return f"{self.name}({json.dumps(self.args, sort_keys=True, separators=(',', ':'))})"
+
+    @property
+    def is_stateful(self) -> bool:
+        return self.mutates is not False  # None → conservative True
+
+    def to_wire(self) -> dict:
+        return {"name": self.name, "args": list(self.args), "mutates": self.mutates}
+
+    @staticmethod
+    def from_wire(d: dict) -> "ToolCall":
+        return ToolCall(d["name"], tuple(d["args"]), d.get("mutates"))
+
+
+@dataclass
+class ToolResult:
+    """Output of executing a tool call in a sandbox."""
+
+    output: object
+    exec_time: float = 0.0
+    ok: bool = True
+
+    def to_wire(self) -> dict:
+        return {"output": self.output, "exec_time": self.exec_time, "ok": self.ok}
+
+    @staticmethod
+    def from_wire(d: dict) -> "ToolResult":
+        return ToolResult(d["output"], d.get("exec_time", 0.0), d.get("ok", True))
+
+
+# --------------------------------------------------------------------------
+# Nodes
+# --------------------------------------------------------------------------
+
+_node_ids = itertools.count()
+
+
+@dataclass
+class TCGNode:
+    """One observed (stateful) tool call: ``(t, r, s)`` of §3.1."""
+
+    descriptor: str
+    result: Optional[ToolResult] = None
+    snapshot: Optional[bytes] = None
+    parent: Optional["TCGNode"] = None
+    depth: int = 0
+    node_id: int = field(default_factory=lambda: next(_node_ids))
+    children: Dict[str, "TCGNode"] = field(default_factory=dict)
+    # Appendix B side table: results of state-preserving tools executed at
+    # this sandbox state, keyed by descriptor.
+    stateless_results: Dict[str, ToolResult] = field(default_factory=dict)
+    # Bookkeeping for the eviction policy and concurrency control (§3.3/§3.4).
+    hits: int = 0
+    refcount: int = 0
+    exec_time: float = 0.0
+    snapshot_nbytes: int = 0
+
+    @property
+    def has_snapshot(self) -> bool:
+        return self.snapshot is not None
+
+    def path(self) -> List[str]:
+        """Root-to-node descriptor path (excluding the dummy root)."""
+        out: List[str] = []
+        node: Optional[TCGNode] = self
+        while node is not None and node.parent is not None:
+            out.append(node.descriptor)
+            node = node.parent
+        return out[::-1]
+
+
+@dataclass
+class LPMResult:
+    """Outcome of a longest-prefix match against the TCG (§3.2).
+
+    ``node``          — deepest TCG node matched by the (stateful) history.
+    ``matched_calls`` — how many calls of the *full* query history matched
+                        (stateless calls in skipped mode count as matched
+                        since they do not affect state).
+    ``unmatched``     — index into the query of the first unmatched call.
+    ``is_exact``      — the entire query matched (cache hit for its tail).
+    """
+
+    node: TCGNode
+    matched_calls: int
+    unmatched: int
+    is_exact: bool
+
+
+# --------------------------------------------------------------------------
+# The graph
+# --------------------------------------------------------------------------
+
+
+class ToolCallGraph:
+    """Thread-safe per-task TCG with LPM lookups and selective snapshots."""
+
+    def __init__(self, task_id: str, skip_stateless: bool = False):
+        self.task_id = task_id
+        # When True, perform LPM over only the state-modifying subsequence
+        # (Appendix B).  When False, every call is treated as stateful.
+        self.skip_stateless = skip_stateless
+        self.root = TCGNode(descriptor="<root>")
+        self._lock = threading.RLock()
+        self._n_nodes = 1
+
+    # -- helpers ----------------------------------------------------------
+
+    def _treat_stateful(self, call: ToolCall) -> bool:
+        return call.is_stateful or not self.skip_stateless
+
+    # -- queries ----------------------------------------------------------
+
+    def walk(self, history: Sequence[ToolCall]) -> Tuple[TCGNode, int]:
+        """Walk ``history`` down the trie.
+
+        Returns ``(node, i)`` where ``node`` is the deepest node reached and
+        ``i`` is the index of the first call in ``history`` that failed to
+        match (``i == len(history)`` when the whole history matched).
+        Stateless calls (in skip mode) never block the walk — they are not
+        part of the state trajectory.
+        """
+        with self._lock:
+            node = self.root
+            for i, call in enumerate(history):
+                if not self._treat_stateful(call):
+                    continue  # state-preserving: irrelevant to the walk
+                child = node.children.get(call.descriptor)
+                if child is None:
+                    return node, i
+                node = child
+            return node, len(history)
+
+    def lookup(self, history: Sequence[ToolCall], call: ToolCall) -> Optional[ToolResult]:
+        """Exact-match lookup: the GET /get of the paper's server.
+
+        Returns the cached result of ``call`` given that the rollout's prior
+        tool history is ``history``, or None on a miss.
+        """
+        with self._lock:
+            node, i = self.walk(history)
+            if i < len(history):
+                return None  # history itself diverges from every cached path
+            if self._treat_stateful(call):
+                child = node.children.get(call.descriptor)
+                if child is None or child.result is None:
+                    return None
+                child.hits += 1
+                return child.result
+            res = node.stateless_results.get(call.descriptor)
+            if res is not None:
+                node.hits += 1
+            return res
+
+    def lpm(self, query: Sequence[ToolCall]) -> LPMResult:
+        """POST /prefix_match: longest-prefix match of ``query`` (§3.2)."""
+        with self._lock:
+            node, i = self.walk(query)
+            is_exact = i == len(query)
+            return LPMResult(node=node, matched_calls=i, unmatched=i, is_exact=is_exact)
+
+    def deepest_snapshot(self, node: TCGNode) -> Optional[TCGNode]:
+        """Deepest ancestor-or-self of ``node`` carrying a sandbox snapshot."""
+        with self._lock:
+            cur: Optional[TCGNode] = node
+            while cur is not None:
+                if cur.has_snapshot:
+                    return cur
+                cur = cur.parent
+            return None
+
+    # -- mutation ---------------------------------------------------------
+
+    def insert(
+        self,
+        at: TCGNode,
+        call: ToolCall,
+        result: ToolResult,
+        snapshot: Optional[bytes] = None,
+    ) -> TCGNode:
+        """PUT /put: record an executed call under node ``at``.
+
+        Stateful calls create a child node (and optionally store a snapshot);
+        stateless calls (skip mode) land in the node's side table, which is
+        exactly the paper's "attach to the last state-modifying node".
+        """
+        with self._lock:
+            if not self._treat_stateful(call):
+                at.stateless_results.setdefault(call.descriptor, result)
+                return at
+            child = at.children.get(call.descriptor)
+            if child is None:
+                child = TCGNode(
+                    descriptor=call.descriptor,
+                    result=result,
+                    parent=at,
+                    depth=at.depth + 1,
+                    exec_time=result.exec_time,
+                )
+                at.children[call.descriptor] = child
+                self._n_nodes += 1
+            elif child.result is None:
+                child.result = result
+                child.exec_time = result.exec_time
+            if snapshot is not None and child.snapshot is None:
+                child.snapshot = snapshot
+                child.snapshot_nbytes = len(snapshot)
+            return child
+
+    def attach_snapshot(self, node: TCGNode, snapshot: bytes) -> None:
+        with self._lock:
+            node.snapshot = snapshot
+            node.snapshot_nbytes = len(snapshot)
+
+    def drop_snapshot(self, node: TCGNode) -> None:
+        with self._lock:
+            node.snapshot = None
+            node.snapshot_nbytes = 0
+
+    # -- concurrency control (§3.4) ----------------------------------------
+
+    def incref(self, node: TCGNode) -> None:
+        with self._lock:
+            node.refcount += 1
+
+    def decref(self, node: TCGNode) -> None:
+        with self._lock:
+            if node.refcount <= 0:
+                raise RuntimeError(f"decref on node {node.node_id} with refcount 0")
+            node.refcount -= 1
+
+    # -- introspection -----------------------------------------------------
+
+    def __len__(self) -> int:
+        return self._n_nodes
+
+    def nodes(self) -> Iterator[TCGNode]:
+        with self._lock:
+            stack = [self.root]
+            while stack:
+                node = stack.pop()
+                yield node
+                stack.extend(node.children.values())
+
+    def snapshot_nodes(self) -> List[TCGNode]:
+        return [n for n in self.nodes() if n.has_snapshot]
+
+    def snapshot_bytes(self) -> int:
+        return sum(n.snapshot_nbytes for n in self.snapshot_nodes())
+
+    def to_dot(self) -> str:
+        """GraphViz rendering (the server's TCG-visualization endpoint)."""
+        lines = ["digraph TCG {", '  rankdir="LR";']
+        for node in self.nodes():
+            label = node.descriptor.replace('"', "'")
+            shape = "doublecircle" if node.has_snapshot else "ellipse"
+            lines.append(
+                f'  n{node.node_id} [label="{label}\\nhits={node.hits}", shape={shape}];'
+            )
+            for child in node.children.values():
+                lines.append(f"  n{node.node_id} -> n{child.node_id};")
+        lines.append("}")
+        return "\n".join(lines)
+
+    # -- persistence (server crash protection, §3.4) ------------------------
+
+    def _node_to_dict(self, node: TCGNode) -> dict:
+        return {
+            "descriptor": node.descriptor,
+            "result": node.result.to_wire() if node.result else None,
+            "snapshot": node.snapshot,
+            "hits": node.hits,
+            "exec_time": node.exec_time,
+            "stateless": {k: v.to_wire() for k, v in node.stateless_results.items()},
+            "children": [self._node_to_dict(c) for c in node.children.values()],
+        }
+
+    def to_bytes(self) -> bytes:
+        with self._lock:
+            return serialize.dumps(
+                {
+                    "task_id": self.task_id,
+                    "skip_stateless": self.skip_stateless,
+                    "root": self._node_to_dict(self.root),
+                }
+            )
+
+    @staticmethod
+    def from_bytes(blob: bytes) -> "ToolCallGraph":
+        data = serialize.loads(blob)
+        tcg = ToolCallGraph(data["task_id"], skip_stateless=data["skip_stateless"])
+
+        def build(d: dict, parent: Optional[TCGNode], depth: int) -> TCGNode:
+            node = TCGNode(
+                descriptor=d["descriptor"],
+                result=ToolResult.from_wire(d["result"]) if d["result"] else None,
+                snapshot=d["snapshot"],
+                parent=parent,
+                depth=depth,
+                hits=d["hits"],
+                exec_time=d["exec_time"],
+            )
+            if node.snapshot is not None:
+                node.snapshot_nbytes = len(node.snapshot)
+            node.stateless_results = {
+                k: ToolResult.from_wire(v) for k, v in d["stateless"].items()
+            }
+            for c in d["children"]:
+                child = build(c, node, depth + 1)
+                node.children[child.descriptor] = child
+            return node
+
+        tcg.root = build(data["root"], None, 0)
+        tcg._n_nodes = sum(1 for _ in tcg.nodes())
+        return tcg

@@ -1,0 +1,19 @@
+"""Task datasets + scripted rollout policies for the three paper workloads."""
+
+from .tasks import (
+    ScriptedPolicy,
+    SQLPolicy,
+    TerminalPolicy,
+    VideoPolicy,
+    WorkloadSpec,
+    make_workload,
+)
+
+__all__ = [
+    "ScriptedPolicy",
+    "SQLPolicy",
+    "TerminalPolicy",
+    "VideoPolicy",
+    "WorkloadSpec",
+    "make_workload",
+]

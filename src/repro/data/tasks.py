@@ -1,0 +1,296 @@
+"""Workload definitions: task sets + scripted rollout policies.
+
+The paper's hit rates are driven by the *distributional* redundancy of tool
+calls across the parallel rollouts of a task (§2.3): rollouts for the same
+prompt clone the same repo, run the same tests, query the same tables.  The
+scripted policies below sample tool-call sequences from per-workload
+stochastic grammars whose branching structure mirrors the three benchmarks:
+
+* terminal-bench — long mandatory prefix (clone/install), exploratory reads,
+  patch attempts, test runs; conservative all-stateful annotation ⇒ hit rates
+  in the teens-to-twenties (paper: 14.2–25.3%).
+* SkyRL-SQL     — stateless reads drawn from a smallish per-task query pool
+  (paper avg 33.1%).
+* EgoSchema     — forced load→preprocess prefix + 4 stateless query tools,
+  string-arg tools more diverse than int-arg ones (paper avg 64.3%,
+  caption_retrieval high / omq+vqa low, App. D).
+
+A real post-trained model replaces these policies via rl/rollout.py; the
+scripted ones make paper-scale workloads reproducible in benchmarks.
+"""
+
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Sequence
+
+from ..core.clock import Clock
+from ..core.tcg import ToolCall
+from ..core.sandbox import ToolExecutionEnvironment
+from ..envs import (
+    SQLSandbox,
+    TerminalSandbox,
+    VideoSandbox,
+    make_sql_task,
+    make_terminal_task,
+    make_video_task,
+)
+
+
+class ScriptedPolicy:
+    """Samples one rollout's tool-call sequence for a task."""
+
+    def sample(self, rng: random.Random) -> List[ToolCall]:
+        raise NotImplementedError
+
+
+@dataclass
+class TerminalPolicy(ScriptedPolicy):
+    task_id: str
+    difficulty: str = "easy"
+    #: larger models repeat tool calls more (§4.1) — higher bias ⇒ less
+    #: exploration ⇒ higher cache hit rates.
+    repeat_bias: float = 0.0
+
+    def sample(self, rng: random.Random) -> List[ToolCall]:
+        def bash(cmd: str) -> ToolCall:
+            return ToolCall("bash", (cmd,))
+
+        def unique(template: str) -> str:
+            # Free-form model output: echo markers, ad-hoc scripts, one-off
+            # greps — the long tail that never repeats across rollouts.
+            return template.format(tag=f"{rng.getrandbits(28):07x}")
+
+        seq = [bash("git_clone repo")]
+        if rng.random() < 0.9:
+            seq.append(bash("pip_install pytest"))
+        reads = ["cat README.md", "cat src/main.py", "ls", "cat tests/test_main.py",
+                 "grep BUG", "ls src", "ls tests", "grep def", "grep run"]
+        uniques = ["echo step-{tag}", "python check_{tag}.py",
+                   "grep {tag}", "write scratch_{tag}.txt probe"]
+        # exploration: mix of repeatable reads and one-off model chatter
+        n_explore = rng.randint(1, 4 if rng.random() > self.repeat_bias else 2)
+        for _ in range(n_explore):
+            if rng.random() < 0.68 - self.repeat_bias:
+                seq.append(bash(unique(rng.choice(uniques))))
+            else:
+                seq.append(bash(rng.choice(reads)))
+        if rng.random() < 0.75:
+            seq.append(bash("run_tests"))
+        patch = rng.choices(
+            ["patch src/main.py BUG FIXED",
+             "patch src/main.py BUG PATCHED",
+             "write src/main.py def run():PLACEHOLDER"],
+            weights=[0.6 + self.repeat_bias, 0.25, 0.15],
+        )[0]
+        seq.append(bash(patch))
+        if self.difficulty == "medium":
+            if rng.random() < 0.6:
+                seq.append(bash("compile"))
+            if rng.random() < 0.5:
+                seq.append(bash(unique(rng.choice(uniques))))
+            if rng.random() < 0.4:
+                seq.append(bash(rng.choice(reads)))
+        seq.append(bash("run_tests"))
+        return seq
+
+
+@dataclass
+class SQLPolicy(ScriptedPolicy):
+    task_id: str
+    region: str = "na"
+
+    def _pool(self) -> List[str]:
+        r = self.region
+        return [
+            "SELECT name FROM sqlite_master WHERE type='table'",
+            "SELECT * FROM orders LIMIT 5",
+            "SELECT COUNT(*) FROM orders",
+            f"SELECT COUNT(*) FROM orders WHERE region = '{r}'",
+            "SELECT region, COUNT(*) FROM orders GROUP BY region",
+            "SELECT MAX(amount) FROM orders",
+            f"SELECT AVG(amount) FROM orders WHERE region = '{r}'",
+            "SELECT * FROM customers LIMIT 5",
+            "SELECT tier, COUNT(*) FROM customers GROUP BY tier",
+        ]
+
+    def _oneoff(self, rng: random.Random) -> str:
+        """LLM-authored exploration with arbitrary literals — rarely repeats."""
+        return rng.choice([
+            f"SELECT * FROM orders WHERE amount > {rng.randint(2, 999)}",
+            f"SELECT * FROM orders LIMIT {rng.randint(2, 40)}",
+            f"SELECT * FROM events WHERE user_id = {rng.randint(0, 199)}",
+            f"SELECT name FROM products WHERE price < {rng.randint(3, 499)}",
+            f"SELECT COUNT(*) FROM events WHERE ts > {1700000000 + rng.randint(0, 10**6)}",
+        ])
+
+    def sample(self, rng: random.Random) -> List[ToolCall]:
+        pool = self._pool()
+        n = rng.randint(2, 5)
+        explore = []
+        for _ in range(max(n - 1, 1)):
+            if rng.random() < 0.78:
+                explore.append(self._oneoff(rng))
+            else:
+                explore.append(rng.choice(pool))
+        final = pool[3]  # the answer query — every rollout converges here
+        return [ToolCall("sql", (q,)) for q in explore + [final]]
+
+
+@dataclass
+class VideoPolicy(ScriptedPolicy):
+    task_id: str
+    video_name: str = "video_0000.mp4"
+    n_segments: int = 90
+
+    def sample(self, rng: random.Random) -> List[ToolCall]:
+        seq = [
+            ToolCall("load_video", (self.video_name,)),
+            ToolCall("preprocess", ()),
+        ]
+        # caption_retrieval args are ints from a small grid → high hit rate;
+        # omq/vqa take strings with phrasing diversity → low hit rate (App D).
+        omq_phrasings = [
+            "how many people are there in the video?",
+            "how many people appear in the video?",
+            "which objects appear most often?",
+            "what objects does the person interact with?",
+            f"in which segments does object {rng.randint(0, 40)} appear?",
+            f"list the objects visible around segment {rng.randint(0, 89)}",
+        ]
+        vqa_phrasings = [
+            "what is the person doing",
+            "what is the man doing",
+            "what activity is shown",
+            "describe the action",
+            f"is anything happening near segment {rng.randint(0, 89)}",
+        ]
+        seg_descriptions = ["cooking", "cleaning", "main activity",
+                            f"scene {rng.randint(0, 20)}"]
+        n_queries = rng.randint(2, 5)
+        for _ in range(n_queries):
+            kind = rng.choices(
+                ["caption", "segloc", "omq", "vqa"],
+                weights=[0.4, 0.25, 0.15, 0.2],
+            )[0]
+            if kind == "caption":
+                start = rng.choice([0, 15, 30, 45, 60, 75])
+                seq.append(ToolCall("caption_retrieval", (start, start + 15)))
+            elif rng.random() < 0.33:
+                # free-form one-off phrasing (string-arg diversity, App D)
+                seq.append(ToolCall(
+                    "visual_question_answering",
+                    (f"describe what happens ({rng.getrandbits(24):06x})",
+                     rng.randint(0, 89)),
+                ))
+            elif kind == "segloc":
+                seq.append(
+                    ToolCall("segment_localization", (rng.choice(seg_descriptions),))
+                )
+            elif kind == "omq":
+                seq.append(
+                    ToolCall("object_memory_querying", (rng.choice(omq_phrasings),))
+                )
+            else:
+                seq.append(
+                    ToolCall(
+                        "visual_question_answering",
+                        (rng.choice(vqa_phrasings), rng.choice([5, 20, 45, 70])),
+                    )
+                )
+        return seq
+
+
+# --------------------------------------------------------------------------
+# Workload assembly (paper Table 1)
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class WorkloadSpec:
+    name: str
+    n_tasks: int
+    n_epochs: int
+    rollouts_per_task: int
+    skip_stateless: bool
+    enable_snapshots: bool
+    env_factory: Callable[[str, Clock], ToolExecutionEnvironment]
+    policy_factory: Callable[[str], ScriptedPolicy]
+    task_ids: List[str] = field(default_factory=list)
+    annotate: Optional[Callable[[ToolCall], Optional[bool]]] = None
+    # Reasoning-token generation model (Fig. 2 time-fraction calibration):
+    # tokens/rollout sampled uniformly, at ``s_per_token`` seconds each.
+    gen_tokens: tuple = (1400, 2048)
+    s_per_token: float = 0.065
+
+
+def make_workload(name: str, n_tasks: Optional[int] = None,
+                  n_epochs: Optional[int] = None,
+                  rollouts: Optional[int] = None,
+                  repeat_bias: float = 0.0) -> WorkloadSpec:
+    """Build one of the paper's three workloads (Table 1 defaults)."""
+    if name in ("terminal-easy", "terminal-medium"):
+        difficulty = name.split("-")[1]
+        n = n_tasks or (51 if difficulty == "easy" else 95)
+        tasks = {
+            f"terminal-{difficulty}-{i:03d}": make_terminal_task(i, difficulty)
+            for i in range(n)
+        }
+        return WorkloadSpec(
+            name=name,
+            n_tasks=n,
+            n_epochs=n_epochs or 10,
+            rollouts_per_task=rollouts or 8,
+            skip_stateless=False,  # bash: conservative (App B default)
+            enable_snapshots=True,
+            env_factory=lambda tid, clock: TerminalSandbox(clock, tasks[tid]),
+            policy_factory=lambda tid: TerminalPolicy(
+                tid, difficulty, repeat_bias=repeat_bias
+            ),
+            task_ids=list(tasks),
+        )
+    if name == "sql":
+        n = n_tasks or 653
+        tasks = {f"sql-{i:04d}": make_sql_task(i) for i in range(n)}
+        regions = {tid: t.answer_sql.split("'")[1] for tid, t in tasks.items()}
+        return WorkloadSpec(
+            name=name,
+            n_tasks=n,
+            n_epochs=n_epochs or 10,
+            rollouts_per_task=rollouts or 5,
+            skip_stateless=True,  # reads are annotated stateless
+            enable_snapshots=False,  # §4.2: snapshotting unnecessary
+            env_factory=lambda tid, clock: SQLSandbox(clock, tasks[tid]),
+            policy_factory=lambda tid: SQLPolicy(tid, region=regions[tid]),
+            task_ids=list(tasks),
+            annotate=lambda call: (
+                not str(call.args[0]).lstrip().lower().startswith(
+                    ("select", "with", "pragma", "explain")
+                )
+                if call.name == "sql" and call.args else None
+            ),
+            gen_tokens=(250, 600),
+            s_per_token=0.015,
+        )
+    if name == "video":
+        n = n_tasks or 100
+        tasks = {f"ego-{i:04d}": make_video_task(i) for i in range(n)}
+        return WorkloadSpec(
+            name=name,
+            n_tasks=n,
+            n_epochs=n_epochs or 5,
+            rollouts_per_task=rollouts or 8,
+            skip_stateless=True,  # App D: only 2/6 tools mutate state
+            enable_snapshots=True,
+            env_factory=lambda tid, clock: VideoSandbox(clock, tasks[tid]),
+            policy_factory=lambda tid: VideoPolicy(
+                tid, video_name=tasks[tid].video_name,
+                n_segments=tasks[tid].n_segments,
+            ),
+            task_ids=list(tasks),
+            annotate=lambda call: call.name in ("load_video", "preprocess"),
+            gen_tokens=(4000, 9000),
+            s_per_token=0.04,
+        )
+    raise ValueError(f"unknown workload {name}")

@@ -1,0 +1,32 @@
+"""Sandbox environments for the three paper workloads (§4, Table 1).
+
+* :mod:`~repro.envs.terminal` — terminal-bench-style bash sandbox (Docker
+  container analogue): a deterministic micro-shell over a simulated
+  filesystem, with compile/test/install tools whose latencies match the
+  paper's measured medians.
+* :mod:`~repro.envs.sql` — SkyRL-SQL-style sandbox over a *real* in-memory
+  sqlite3 database with simulated cloud round-trip latency; tool calls are
+  stateless read queries.
+* :mod:`~repro.envs.video` — EgoSchema/VideoAgent-style sandbox: 6 tools of
+  which only ``load_video`` and ``preprocess`` mutate state (Appendix B/D).
+
+All sandboxes are deterministic state machines (identical tool sequences ⇒
+identical outputs and states), which is the property TVCache's exactness
+guarantee is defined against.
+"""
+
+from .terminal import TerminalSandbox, TerminalTask, make_terminal_task
+from .sql import SQLSandbox, SQLTask, make_sql_task
+from .video import VideoSandbox, VideoTask, make_video_task
+
+__all__ = [
+    "TerminalSandbox",
+    "TerminalTask",
+    "SQLSandbox",
+    "SQLTask",
+    "VideoSandbox",
+    "VideoTask",
+    "make_terminal_task",
+    "make_sql_task",
+    "make_video_task",
+]

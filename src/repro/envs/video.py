@@ -1,0 +1,182 @@
+"""EgoSchema / VideoAgent-style sandbox (paper §4.3, Appendices B & D).
+
+Six tools; only ``load_video`` and ``preprocess`` mutate the sandbox (a
+per-task media folder in the paper).  The remaining four are read-only
+queries over the preprocessed memory, annotated ``will_mutate_state()=False``
+— the workload where Appendix-B stateless prefix skipping shines (paper hit
+rates up to 73.9%).
+
+``caption_retrieval`` models the OpenAI-API-backed captioner: each miss
+charges both latency *and* API tokens, so cache hits translate into the
+paper's 3× token-cost reduction.
+"""
+
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass
+from statistics import NormalDist
+from typing import Dict, Optional
+
+from ..core.clock import Clock
+from ..core.sandbox import ToolExecutionEnvironment
+from ..core.tcg import ToolCall, ToolResult
+
+_NORMAL = NormalDist()
+_STATEFUL_TOOLS = frozenset({"load_video", "preprocess"})
+
+# Latency medians/sigmas per tool (Fig. 11: omq longest; load/preprocess are
+# fast file-system copies since preprocessing is done once per dataset).
+_LATENCY = {
+    "load_video": (0.9, 0.3),
+    "preprocess": (1.4, 0.3),
+    "object_memory_querying": (21.0, 0.5),
+    "segment_localization": (3.2, 0.4),
+    "caption_retrieval": (7.5, 0.4),
+    "visual_question_answering": (11.0, 0.45),
+}
+
+#: API token cost per miss for the OpenAI-backed captioner (App. D).
+_CAPTION_TOKENS = 850
+
+
+def _u01(*parts: str) -> float:
+    h = hashlib.sha256("\x1f".join(parts).encode()).digest()
+    return (int.from_bytes(h[:8], "big") + 0.5) / 2**64
+
+
+def _digest(*parts: str) -> str:
+    return hashlib.sha256("\x1f".join(parts).encode()).hexdigest()[:12]
+
+
+@dataclass(frozen=True)
+class VideoTask:
+    task_id: str
+    video_name: str
+    question: str
+    n_segments: int = 90  # 3-minute videos, 2-second segments
+    answer: int = 0  # ground-truth multiple-choice option (0–4)
+
+
+def make_video_task(i: int) -> VideoTask:
+    return VideoTask(
+        task_id=f"ego-{i:04d}",
+        video_name=f"video_{i:04d}.mp4",
+        question=f"What is the primary activity in video {i}?",
+        answer=int(_u01(f"ego-{i}", "ans") * 5),
+    )
+
+
+class VideoSandbox(ToolExecutionEnvironment):
+    """Per-task media folder with VideoAgent's tool surface."""
+
+    startup_time = 0.5
+    requires_network = False  # folder copy, no bridge network
+
+    def __init__(self, clock: Clock, task: VideoTask):
+        super().__init__(clock)
+        self.task = task
+        self._loaded: Optional[str] = None
+        self._preprocessed = False
+        self.api_tokens_spent = 0  # OpenAI token accounting (App. D)
+
+    # -- environment interface -------------------------------------------------
+
+    def _do_start(self) -> None:
+        self._loaded = None
+        self._preprocessed = False
+
+    def snapshot_state(self) -> object:
+        return {"loaded": self._loaded, "preprocessed": self._preprocessed}
+
+    def restore_state(self, state: object) -> None:
+        self._loaded = state["loaded"]
+        self._preprocessed = state["preprocessed"]
+
+    def estimate_snapshot_nbytes(self) -> int:
+        return 96
+
+    def will_mutate_state(self, call: ToolCall) -> bool:
+        return call.name in _STATEFUL_TOOLS
+
+    # -- tools -------------------------------------------------------------------
+
+    def _latency(self, tool: str, key: str) -> float:
+        median, sigma = _LATENCY.get(tool, (5.0, 0.4))
+        u = min(max(_u01(self.task.task_id, tool, key), 1e-12), 1 - 1e-12)
+        return median * pow(2.718281828459045, sigma * _NORMAL.inv_cdf(u))
+
+    def _do_execute(self, call: ToolCall) -> ToolResult:
+        name = call.name
+        args = call.args
+        key = repr(args)
+        exec_time = self._latency(name, key)
+        state_key = f"{self._loaded}|{self._preprocessed}"
+
+        if name == "load_video":
+            video = str(args[0]) if args else self.task.video_name
+            self._loaded = video
+            self._preprocessed = False
+            return ToolResult(output=f"loaded {video} into sandbox", exec_time=exec_time)
+
+        if name == "preprocess":
+            if self._loaded is None:
+                return ToolResult(output="error: no video loaded", exec_time=0.2, ok=False)
+            self._preprocessed = True
+            return ToolResult(
+                output=f"built temporal+object memory for {self._loaded} "
+                       f"({self.task.n_segments} segments)",
+                exec_time=exec_time,
+            )
+
+        # All remaining tools require a preprocessed video.
+        if not self._preprocessed:
+            return ToolResult(
+                output="error: call load_video and preprocess first",
+                exec_time=0.2, ok=False,
+            )
+
+        if name == "object_memory_querying":
+            q = str(args[0]) if args else ""
+            return ToolResult(
+                output=f"object-memory[{_digest(state_key, 'omq', q)}]: "
+                       f"objects relevant to '{q[:48]}'",
+                exec_time=exec_time,
+            )
+
+        if name == "segment_localization":
+            desc = str(args[0]) if args else ""
+            segs = sorted(
+                int(_u01(state_key, "seg", desc, str(j)) * self.task.n_segments)
+                for j in range(5)
+            )
+            return ToolResult(output={"top5_segments": segs}, exec_time=exec_time)
+
+        if name == "caption_retrieval":
+            start = int(args[0]) if len(args) > 0 else 0
+            end = min(int(args[1]) if len(args) > 1 else start + 1, start + 15)
+            caps = [
+                f"#C seg{j}: {_digest(state_key, 'cap', str(j))}"
+                for j in range(start, end)
+            ]
+            self.api_tokens_spent += _CAPTION_TOKENS  # miss ⇒ real API spend
+            return ToolResult(output={"captions": caps}, exec_time=exec_time)
+
+        if name == "visual_question_answering":
+            q = str(args[0]) if args else ""
+            seg = int(args[1]) if len(args) > 1 else 0
+            return ToolResult(
+                output={
+                    "description": f"segments {seg-1}..{seg+1}: "
+                                   f"{_digest(state_key, 'vqa-desc', q, str(seg))}",
+                    "answer": int(_u01(state_key, "vqa", q, str(seg)) * 5),
+                },
+                exec_time=exec_time,
+            )
+
+        return ToolResult(output=f"unknown tool {name}", exec_time=0.1, ok=False)
+
+    # -- reward hook ----------------------------------------------------------
+
+    def check_answer(self, option: int) -> bool:
+        return option == self.task.answer

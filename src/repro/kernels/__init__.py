@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the post-training substrate's compute hot spots.
+
+TVCACHE itself has no kernel-level contribution (it is host-side systems
+code); these kernels accelerate the model side of rollout generation and
+training: flash attention (GQA/sliding window), Mamba2 SSD scan, fused
+RMSNorm, MoE grouped matmul.  Each has a pure-jnp oracle in ``ref.py`` and
+shape/dtype sweep tests (interpret mode on CPU; Mosaic on real TPUs).
+"""
+
+from .ops import flash_attention, flash_attention_trainable, moe_gmm, rmsnorm, ssd
+
+__all__ = ["flash_attention", "flash_attention_trainable", "moe_gmm", "rmsnorm", "ssd"]

@@ -1,0 +1,145 @@
+"""Flash attention (causal GQA, optional sliding window) as a Pallas TPU kernel.
+
+TPU adaptation notes (DESIGN.md §3): instead of the CUDA warp-level streaming
+softmax, the kernel is tiled for the MXU — q blocks of ``block_q`` rows ×
+head_dim (≥128-aligned for real configs) against k/v blocks of ``block_k``
+rows staged HBM→VMEM by ``BlockSpec``.  The KV axis is the innermost grid
+dimension (sequential on a TensorCore), so the online-softmax state
+(running max ``m``, normalizer ``l``, accumulator ``acc``) lives in VMEM
+scratch across KV steps.  Out-of-window / fully-future KV blocks are skipped
+with ``pl.when`` — block-sparsity for causal & sliding-window masks.
+
+Grid: (B, H, num_q_blocks, num_kv_blocks); GQA maps query head h to kv head
+h // (H / KV) in the k/v index_maps.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, block_q: int, block_k: int, causal: bool, window: int, scale: float,
+):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = iq * block_q
+    k_start = ik * block_k
+
+    # Block-level sparsity: skip blocks strictly in the future (causal) or
+    # entirely outside the sliding window.
+    relevant = True
+    if causal:
+        relevant = k_start <= q_start + block_q - 1
+    if window:
+        relevant = jnp.logical_and(
+            relevant, k_start + block_k - 1 > q_start - window
+        )
+
+    @pl.when(relevant)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # [bq, hd]
+        k = k_ref[0, 0].astype(jnp.float32)  # [bk, hd]
+        v = v_ref[0, 0].astype(jnp.float32)  # [bk, hd]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+        rows = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        cols = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            mask &= cols <= rows
+        if window:
+            mask &= cols > rows - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]  # [bq, 1]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = alpha * acc_ref[...] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """q: [B,S,H,hd], k/v: [B,S,KV,hd] → [B,S,H,hd]."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    assert S % block_q == 0 and S % block_k == 0, "seq must tile evenly"
+    nq, nk = S // block_q, S // block_k
+    scale = hd ** -0.5
+
+    # [B,S,H,hd] → [B,H,S,hd] so blocks are contiguous per head.
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(
+        _flash_kernel,
+        block_q=block_q, block_k=block_k,
+        causal=causal, window=window, scale=scale,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda b, h, iq, ik: (b, h // G, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda b, h, iq, ik: (b, h // G, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, block_q, hd), lambda b, h, iq, ik: (b, h, iq, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)

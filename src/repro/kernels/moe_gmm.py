@@ -1,0 +1,75 @@
+"""Grouped (per-expert) matmul as a Pallas TPU kernel.
+
+The MoE FFN's core compute: x [E, C, D] @ w [E, D, F] with E independent
+groups.  Tiled (block_c × block_f) with a block_d contraction loop carried in
+a VMEM f32 accumulator across the innermost (sequential) grid axis — the
+standard MXU matmul pipeline, one expert per leading grid index (which is
+exactly the expert-parallel axis under GSPMD sharding).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gmm_kernel(x_ref, w_ref, o_ref, acc_ref):
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[0].astype(jnp.float32),
+        w_ref[0].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(ik == nk - 1)
+    def _emit():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_c", "block_f", "block_d", "interpret")
+)
+def moe_gmm(
+    x: jax.Array,
+    w: jax.Array,
+    block_c: int = 128,
+    block_f: int = 128,
+    block_d: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """x: [E, C, D] @ w: [E, D, F] → [E, C, F]."""
+    E, C, D = x.shape
+    F = w.shape[-1]
+    bc, bf, bd = min(block_c, C), min(block_f, F), min(block_d, D)
+    if C % bc:
+        bc = 1
+    if F % bf:
+        bf = F
+    if D % bd:
+        bd = D
+    grid = (E, C // bc, F // bf, D // bd)
+    return pl.pallas_call(
+        _gmm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bc, bd), lambda e, ic, jf, kd: (e, ic, kd)),
+            pl.BlockSpec((1, bd, bf), lambda e, ic, jf, kd: (e, kd, jf)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, bf), lambda e, ic, jf, kd: (e, ic, jf)),
+        out_shape=jax.ShapeDtypeStruct((E, C, F), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bc, bf), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x, w)

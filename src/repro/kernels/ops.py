@@ -1,0 +1,78 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+``interpret=None`` auto-selects: compiled Mosaic on TPU, interpret mode
+elsewhere (this CPU container).  Models opt in via ``cfg.use_pallas``; the
+dry-run always takes the pure-jnp path (GSPMD partitioning of the jnp
+implementations is what the roofline analyzes).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from .flash_attention import flash_attention as _flash
+from .mamba_ssd import ssd as _ssd
+from .moe_gmm import moe_gmm as _gmm
+from .rmsnorm import rmsnorm as _rmsnorm
+
+
+def _auto(interpret: Optional[bool]) -> bool:
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def flash_attention(q, k, v, causal=True, window=0, block_q=128, block_k=128,
+                    interpret: Optional[bool] = None):
+    return _flash(q, k, v, causal=causal, window=window,
+                  block_q=block_q, block_k=block_k, interpret=_auto(interpret))
+
+
+# -- differentiable wrapper -------------------------------------------------
+#
+# pallas_call has no automatic VJP; until a dedicated backward kernel lands,
+# the custom_vjp below runs the Pallas kernel on the FORWARD pass and
+# recomputes the reference jnp attention under jax.vjp for the backward —
+# numerically identical gradients (flash attention is exact), with the
+# standard remat-style recompute cost.
+
+import functools as _functools
+
+import jax as _jax
+
+
+@_functools.partial(_jax.custom_vjp, nondiff_argnums=(3, 4))
+def flash_attention_trainable(q, k, v, causal=True, window=0):
+    return flash_attention(q, k, v, causal=causal, window=window)
+
+
+def _fat_fwd(q, k, v, causal, window):
+    return flash_attention_trainable(q, k, v, causal, window), (q, k, v)
+
+
+def _fat_bwd(causal, window, res, g):
+    from .ref import attention_ref
+
+    q, k, v = res
+    _, vjp = _jax.vjp(
+        lambda q_, k_, v_: attention_ref(q_, k_, v_, causal=causal, window=window),
+        q, k, v,
+    )
+    return vjp(g)
+
+
+flash_attention_trainable.defvjp(_fat_fwd, _fat_bwd)
+
+
+def ssd(x, dt, A, B, C, chunk=128, interpret: Optional[bool] = None):
+    return _ssd(x, dt, A, B, C, chunk=chunk, interpret=_auto(interpret))
+
+
+def rmsnorm(x, scale, eps=1e-5, interpret: Optional[bool] = None):
+    return _rmsnorm(x, scale, eps=eps, interpret=_auto(interpret))
+
+
+def moe_gmm(x, w, interpret: Optional[bool] = None):
+    return _gmm(x, w, interpret=_auto(interpret))

@@ -1,0 +1,87 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Deliberately *independent* implementations: e.g. the SSD oracle is the exact
+sequential recurrence (not the chunked algorithm the kernel uses), so the
+kernel sweep cross-checks algorithm and implementation at once.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    window: int = 0,
+) -> jax.Array:
+    """q: [B,S,H,hd], k/v: [B,S,KV,hd] (GQA) → [B,S,H,hd].  f32 softmax."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, hd)
+    logits = jnp.einsum(
+        "bqkgh,bskh->bkgqs", qg, k, preferred_element_type=jnp.float32
+    ) * (hd ** -0.5)
+    rows = jnp.arange(S)[:, None]
+    cols = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), dtype=bool)
+    if causal:
+        mask &= cols <= rows
+    if window:
+        mask &= cols > rows - window
+    logits = jnp.where(mask, logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w.astype(v.dtype), v)
+    return out.reshape(B, S, H, hd)
+
+
+def ssd_ref(
+    x: jax.Array,
+    dt: jax.Array,
+    A: jax.Array,
+    B_: jax.Array,
+    C: jax.Array,
+) -> tuple:
+    """Exact sequential SSD recurrence.
+
+    x: [B,S,H,P], dt: [B,S,H], A: [H] (negative), B_/C: [B,S,H,N].
+    h_t = exp(dt_t·A)·h_{t−1} + dt_t·(B_t ⊗ x_t);  y_t = C_t·h_t.
+    Returns (y [B,S,H,P], final_state [B,H,P,N]).
+    """
+    Bb, S, H, P = x.shape
+    N = B_.shape[-1]
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp  # [B,H,P], [B,H], [B,H,N], [B,H,N]
+        decay = jnp.exp(dtt * A)  # [B,H]
+        h = decay[..., None, None] * h + jnp.einsum(
+            "bh,bhp,bhn->bhpn", dtt, xt, bt
+        )
+        y = jnp.einsum("bhpn,bhn->bhp", h, ct)
+        return h, y
+
+    h0 = jnp.zeros((Bb, H, P, N), jnp.float32)
+    xs = (
+        x.transpose(1, 0, 2, 3).astype(jnp.float32),
+        dt.transpose(1, 0, 2).astype(jnp.float32),
+        B_.transpose(1, 0, 2, 3).astype(jnp.float32),
+        C.transpose(1, 0, 2, 3).astype(jnp.float32),
+    )
+    h, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), h
+
+
+def rmsnorm_ref(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def moe_gmm_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Grouped matmul: x [E,C,D] @ w [E,D,F] → [E,C,F]."""
+    return jnp.einsum("ecd,edf->ecf", x, w,
+                      preferred_element_type=jnp.float32).astype(x.dtype)

@@ -1,0 +1,141 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+Lowers + compiles every (architecture × input-shape) combination on the
+production meshes — 16×16 single-pod and 2×16×16 multi-pod — with
+ShapeDtypeStruct inputs (no allocation), records ``memory_analysis()`` /
+``cost_analysis()`` / collective bytes, and writes one JSON row per combo to
+``results/dryrun/``.  Failures here (sharding mismatch, OOM at compile,
+unsupported collective) are bugs in the system.
+
+NOTE the first two lines of this module: jax locks the device count on first
+init, so the 512 placeholder devices MUST be requested before any jax import.
+This env var is set ONLY here — smoke tests and benches see 1 device.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k
+    python -m repro.launch.dryrun --all [--mesh single|multi|both]
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from ..configs import ASSIGNED_ARCHS, INPUT_SHAPES, get_config
+from ..models import api as model_api
+from .hlo_analysis import analyze_compiled
+from .mesh import make_production_mesh
+from .steps import lower_combo
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "results", "dryrun")
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    if not model_api.supports(cfg, shape):
+        return {
+            "arch": arch, "shape": shape_name, "mesh": mesh_name,
+            "status": "skipped",
+            "reason": "unsupported (see DESIGN.md §Arch-applicability)",
+        }
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    with mesh:
+        lowered, kind, jcost = lower_combo(cfg, shape)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        roof = analyze_compiled(
+            cfg, shape, mesh_name, kind, mesh.size, compiled, jaxpr_cost=jcost
+        )
+    mem = compiled.memory_analysis()
+    row = roof.row()
+    row.update(
+        status="ok",
+        lower_s=round(t_lower, 2),
+        compile_s=round(t_compile, 2),
+        memory_analysis={
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "generated_code_bytes": mem.generated_code_size_in_bytes,
+        },
+    )
+    if verbose:
+        print(
+            f"[dryrun] {arch} × {shape_name} × {mesh_name} ({kind}): OK "
+            f"compile={t_compile:.1f}s "
+            f"args/dev={mem.argument_size_in_bytes/2**30:.2f}GiB "
+            f"temp/dev={mem.temp_size_in_bytes/2**30:.2f}GiB "
+            f"flops={row['hlo_flops']:.3e} coll={row['collective_bytes_per_chip']:.3e}B "
+            f"bottleneck={row['bottleneck']}"
+        )
+        print(f"  memory_analysis: {mem}")
+        ca_keys = ("flops", "bytes accessed")
+        print(f"  cost_analysis: "
+              + ", ".join(f"{k}={row['hlo_flops' if k == 'flops' else 'hlo_bytes']:.4e}"
+                          for k in ca_keys))
+    return row
+
+
+def save_row(row: dict) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    fname = f"{row['arch']}__{row['shape']}__{row['mesh']}.json"
+    path = os.path.join(RESULTS_DIR, fname)
+    with open(path, "w") as f:
+        json.dump(row, f, indent=1, default=str)
+    return path
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ASSIGNED_ARCHS + ["qwen3-4b"], default=None)
+    ap.add_argument("--shape", choices=list(INPUT_SHAPES), default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    combos = []
+    archs = ASSIGNED_ARCHS if args.all or args.arch is None else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.all or args.shape is None else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                combos.append((arch, shape, mp))
+
+    n_fail = 0
+    for arch, shape, mp in combos:
+        mesh_name = "pod2x16x16" if mp else "pod16x16"
+        fname = os.path.join(RESULTS_DIR, f"{arch}__{shape}__{mesh_name}.json")
+        if args.skip_existing and os.path.exists(fname):
+            with open(fname) as f:
+                if json.load(f).get("status") in ("ok", "skipped"):
+                    print(f"[dryrun] {arch} × {shape} × {mesh_name}: cached, skipping")
+                    continue
+        try:
+            row = run_one(arch, shape, mp)
+        except Exception as e:  # a failure here is a bug in our sharding
+            n_fail += 1
+            row = {
+                "arch": arch, "shape": shape, "mesh": mesh_name,
+                "status": "FAILED", "error": f"{type(e).__name__}: {e}",
+                "traceback": traceback.format_exc()[-4000:],
+            }
+            print(f"[dryrun] {arch} × {shape} × {mesh_name}: FAILED — {e}")
+        save_row(row)
+    if n_fail:
+        raise SystemExit(f"{n_fail} dry-run combos failed")
+    print("[dryrun] all combos OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,134 @@
+"""Analytical FLOP/byte counting over jaxprs.
+
+XLA's ``HloCostAnalysis`` (what ``compiled.cost_analysis()`` reports) counts
+``while``-loop bodies ONCE, so for scan-over-layers models it undercounts by
+~the layer count (verified on this host: a scan of 8 matmuls reports the
+flops of one).  The jaxpr, by contrast, records every ``scan`` with its
+static trip count, so walking it yields exact matmul flops — including remat
+recompute, since the checkpointed backward re-plays the body inside the
+jaxpr we traverse.
+
+Byte accounting is fusion-aware-by-construction: we count HBM traffic only
+for operand/result tensors of compute-bearing ops (dot_general, conv,
+gather/scatter DUS/DS), which is the standard napkin model for TPU —
+elementwise chains fuse and their intermediates never round-trip HBM.  Both
+numbers are whole-module (all chips); divide by chip count for per-chip.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Tuple
+
+from jax._src import core as jcore
+
+
+def _size_bytes(aval) -> int:
+    try:
+        return math.prod(aval.shape) * aval.dtype.itemsize
+    except Exception:
+        return 0
+
+
+_RECURSE_PARAM_KEYS = ("jaxpr", "call_jaxpr", "fun_jaxpr", "cond_jaxpr", "body_jaxpr")
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+
+    def __iadd__(self, other: "Cost") -> "Cost":
+        self.flops += other.flops
+        self.bytes += other.bytes
+        return self
+
+    def scaled(self, k: float) -> "Cost":
+        return Cost(self.flops * k, self.bytes * k)
+
+
+def _dot_cost(eqn) -> Cost:
+    ((lc, rc), (lb, rb)) = eqn.params["dimension_numbers"]
+    a, b = eqn.invars[0].aval, eqn.invars[1].aval
+    batch = math.prod(a.shape[i] for i in lb) if lb else 1
+    k = math.prod(a.shape[i] for i in lc) if lc else 1
+    m = math.prod(
+        a.shape[i] for i in range(len(a.shape)) if i not in lb and i not in lc
+    )
+    n = math.prod(
+        b.shape[i] for i in range(len(b.shape)) if i not in rb and i not in rc
+    )
+    flops = 2.0 * batch * m * n * k
+    byts = _size_bytes(a) + _size_bytes(b) + sum(
+        _size_bytes(v.aval) for v in eqn.outvars
+    )
+    return Cost(flops, byts)
+
+
+def _conv_cost(eqn) -> Cost:
+    out = eqn.outvars[0].aval
+    rhs = eqn.invars[1].aval
+    # flops ≈ 2 × output elements × (kernel elements / out-features)
+    kernel_elems = math.prod(rhs.shape)
+    out_feats = out.shape[eqn.params["dimension_numbers"].out_spec[1]] if hasattr(
+        eqn.params.get("dimension_numbers"), "out_spec"
+    ) else rhs.shape[-1]
+    flops = 2.0 * math.prod(out.shape) * kernel_elems / max(out_feats, 1)
+    byts = sum(_size_bytes(v.aval) for v in list(eqn.invars) + list(eqn.outvars))
+    return Cost(flops, byts)
+
+
+_MEMORY_PRIMS = {
+    "gather", "scatter", "scatter-add", "scatter_add",
+    "dynamic_slice", "dynamic_update_slice",
+}
+
+
+def count_jaxpr(jaxpr) -> Cost:
+    total = Cost()
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if name == "dot_general":
+            total += _dot_cost(eqn)
+            continue
+        if name == "conv_general_dilated":
+            total += _conv_cost(eqn)
+            continue
+        if name == "scan":
+            inner = count_jaxpr(eqn.params["jaxpr"].jaxpr)
+            total += inner.scaled(eqn.params["length"])
+            continue
+        if name == "while":
+            # no static trip count — count the body once (not used by our
+            # models; layer loops are scans)
+            total += count_jaxpr(eqn.params["body_jaxpr"].jaxpr)
+            continue
+        if name in _MEMORY_PRIMS:
+            total += Cost(0.0, sum(
+                _size_bytes(v.aval) for v in eqn.outvars
+            ) * 2.0)
+            continue
+        recursed = False
+        for key in _RECURSE_PARAM_KEYS:
+            sub = eqn.params.get(key) if eqn.params else None
+            if sub is not None:
+                total += count_jaxpr(getattr(sub, "jaxpr", sub))
+                recursed = True
+                break
+        if recursed:
+            continue
+        # elementwise / reduction: count flops (1/elt), no HBM bytes (fused)
+        out_elems = sum(
+            math.prod(v.aval.shape) for v in eqn.outvars if hasattr(v.aval, "shape")
+        )
+        total += Cost(float(out_elems), 0.0)
+    return total
+
+
+def count_fn(fn, *abstract_args) -> Cost:
+    """Trace ``fn`` with abstract args and count its cost."""
+    import jax
+
+    closed = jax.make_jaxpr(fn)(*abstract_args)
+    return count_jaxpr(closed.jaxpr)

@@ -1,0 +1,115 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb driver: lower+compile one (arch × shape) with config
+overrides and report the roofline-term deltas vs the stored baseline.
+
+    python -m repro.launch.perf --arch qwen2-72b --shape train_4k \\
+        --set seq_parallel=True --tag seqpar
+
+Results append to results/perf/<arch>__<shape>__<tag>.json; the experiment
+log (hypothesis → change → before → after → verdict) lives in EXPERIMENTS.md
+§Perf.
+"""
+
+import argparse
+import json
+import time
+
+import jax
+
+from ..configs import INPUT_SHAPES, get_config
+from .hlo_analysis import analyze_compiled
+from .mesh import make_production_mesh
+from .steps import lower_combo
+
+RESULTS_DIR = os.path.join(
+    os.path.dirname(__file__), "..", "..", "..", "results", "perf"
+)
+BASELINE_DIR = os.path.join(
+    os.path.dirname(__file__), "..", "..", "..", "results", "dryrun"
+)
+
+
+def _parse_value(v: str):
+    if v in ("True", "False"):
+        return v == "True"
+    try:
+        return int(v)
+    except ValueError:
+        try:
+            return float(v)
+        except ValueError:
+            return v
+
+
+def run_experiment(arch: str, shape_name: str, overrides: dict, tag: str,
+                   multi_pod: bool = False) -> dict:
+    cfg = get_config(arch).replace(**overrides)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    t0 = time.time()
+    with mesh:
+        lowered, kind, jcost = lower_combo(cfg, shape)
+        compiled = lowered.compile()
+        roof = analyze_compiled(
+            cfg, shape, mesh_name, kind, mesh.size, compiled, jaxpr_cost=jcost
+        )
+    row = roof.row()
+    row.update(
+        status="ok", tag=tag, overrides=overrides,
+        compile_s=round(time.time() - t0, 1),
+        temp_gib=row["temp_bytes_per_device"] / 2**30,
+    )
+    base_path = os.path.join(
+        BASELINE_DIR, f"{arch}__{shape_name}__{mesh_name}.json"
+    )
+    if os.path.exists(base_path):
+        with open(base_path) as f:
+            base = json.load(f)
+        row["baseline"] = {
+            k: base[k]
+            for k in ("compute_s", "memory_s", "collective_s", "bottleneck",
+                      "useful_flops_ratio", "temp_bytes_per_device")
+        }
+        for term in ("compute_s", "memory_s", "collective_s"):
+            b = base[term]
+            row[f"delta_{term}"] = (row[term] - b) / b if b else 0.0
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    out = os.path.join(RESULTS_DIR, f"{arch}__{shape_name}__{tag}.json")
+    with open(out, "w") as f:
+        json.dump(row, f, indent=1, default=str)
+    return row
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=list(INPUT_SHAPES))
+    ap.add_argument("--set", action="append", default=[],
+                    help="cfg override key=value (repeatable)")
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        overrides[k] = _parse_value(v)
+    row = run_experiment(args.arch, args.shape, overrides, args.tag,
+                         args.multi_pod)
+    base = row.get("baseline", {})
+    print(f"[perf] {args.arch} × {args.shape} [{args.tag}] {overrides}")
+    for term in ("compute_s", "memory_s", "collective_s"):
+        b = base.get(term)
+        d = f" ({row.get('delta_' + term, 0):+.1%})" if b else ""
+        print(f"  {term:14} {row[term]:.4e}" + (f"  baseline {b:.4e}{d}" if b else ""))
+    print(f"  bottleneck    {row['bottleneck']} (baseline {base.get('bottleneck')})")
+    print(f"  useful_ratio  {row['useful_flops_ratio']:.3f} "
+          f"(baseline {base.get('useful_flops_ratio', 0):.3f})")
+    print(f"  temp/dev      {row['temp_gib']:.2f} GiB "
+          f"(baseline {base.get('temp_bytes_per_device', 0)/2**30:.2f} GiB)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Local serving driver: batched prefill → decode with KV cache.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --tokens 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import get_config, get_smoke
+from ..models import api as model_api
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch) if args.full else get_smoke(args.arch)
+    fam = model_api.get_family(cfg)
+    rng = np.random.default_rng(0)
+    params = fam.init(jax.random.key(0), cfg)
+
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)), jnp.int32
+    )}
+    if cfg.family in ("encdec", "audio"):
+        batch["frames"] = jnp.asarray(
+            rng.standard_normal((args.batch, args.prompt_len, cfg.frontend_dim)),
+            jnp.float32,
+        )
+    elif cfg.family == "vlm" and cfg.frontend_tokens:
+        batch["patches"] = jnp.asarray(
+            rng.standard_normal(
+                (args.batch, cfg.frontend_tokens, cfg.frontend_dim)
+            ),
+            jnp.float32,
+        )
+
+    prefill = jax.jit(lambda p, b: fam.prefill(p, b, cfg))
+    decode = jax.jit(lambda p, c, t: fam.decode_step(p, c, t, cfg))
+
+    t0 = time.time()
+    logits, cache = prefill(params, batch)
+    print(f"[serve] {cfg.name}: prefill({args.batch}×{args.prompt_len}) "
+          f"in {time.time() - t0:.2f}s")
+
+    tok = jnp.argmax(logits[:, : cfg.vocab_size], axis=-1)[:, None].astype(jnp.int32)
+    generated = [np.asarray(tok[:, 0])]
+    t0 = time.time()
+    for _ in range(args.tokens - 1):
+        logits, cache = decode(params, cache, tok)
+        tok = jnp.argmax(logits[:, : cfg.vocab_size], axis=-1)[:, None].astype(
+            jnp.int32
+        )
+        generated.append(np.asarray(tok[:, 0]))
+    dt = time.time() - t0
+    toks_per_s = args.batch * (args.tokens - 1) / dt
+    print(f"[serve] decoded {args.tokens - 1} steps × batch {args.batch} "
+          f"in {dt:.2f}s ({toks_per_s:.1f} tok/s)")
+    print("[serve] sample row:", np.stack(generated, axis=1)[0][:16])
+
+
+if __name__ == "__main__":
+    main()

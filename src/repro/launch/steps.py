@@ -1,0 +1,243 @@
+"""Step-function builders: train_step / prefill_step / serve_step.
+
+These close over (cfg, family) and are what both the real trainer and the
+multi-pod dry-run lower.  Shardings follow DESIGN.md §5: batch over
+("pod","data"), tensor/expert parallel over "model", FSDP parameter sharding
+over "data", optimizer state mirroring parameter sharding.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import InputShape, ModelConfig
+from ..models import api as model_api
+from ..models.sharding import active_mesh, filtered_spec, kv_cache_entries, param_specs
+from ..optim import AdamWConfig, adamw_init, adamw_update, warmup_cosine
+
+
+# --------------------------------------------------------------------------
+# step functions
+# --------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ModelConfig, opt: Optional[AdamWConfig] = None,
+                    total_steps: int = 10_000, warmup: int = 200):
+    opt = opt or AdamWConfig()
+    fam = model_api.get_family(cfg)
+    n_mb = max(cfg.microbatches, 1)
+
+    def train_step(params, opt_state, batch):
+        if n_mb > 1:
+            # Gradient accumulation (§Perf memory knob): scan over
+            # microbatches with f32 grad accumulation.
+            mb = jax.tree.map(
+                lambda t: t.reshape((n_mb, t.shape[0] // n_mb) + t.shape[1:]),
+                batch,
+            )
+
+            def body(carry, b):
+                loss_acc, g_acc = carry
+                loss, grads = jax.value_and_grad(
+                    lambda p: fam.loss(p, b, cfg)
+                )(params)
+                g_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32) / n_mb, g_acc, grads
+                )
+                return (loss_acc + loss / n_mb, g_acc), None
+
+            zeros = jax.tree.map(
+                lambda t: jnp.zeros(t.shape, jnp.float32), params
+            )
+            (loss, grads), _ = jax.lax.scan(
+                body, (jnp.float32(0.0), zeros), mb
+            )
+        else:
+            loss, grads = jax.value_and_grad(
+                lambda p: fam.loss(p, batch, cfg)
+            )(params)
+        lr_scale = warmup_cosine(opt_state["step"], warmup, total_steps)
+        params, opt_state = adamw_update(grads, opt_state, params, opt, lr_scale)
+        return loss, params, opt_state
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    fam = model_api.get_family(cfg)
+
+    def prefill_step(params, batch):
+        return fam.prefill(params, batch, cfg)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, ring: bool = False):
+    fam = model_api.get_family(cfg)
+
+    def serve_step(params, cache, token):
+        return fam.decode_step(params, cache, token, cfg, ring=ring)
+
+    return serve_step
+
+
+# --------------------------------------------------------------------------
+# abstract inputs + shardings
+# --------------------------------------------------------------------------
+
+
+def abstract_params(cfg: ModelConfig):
+    fam = model_api.get_family(cfg)
+    return jax.eval_shape(lambda: fam.init(jax.random.key(0), cfg))
+
+
+def abstract_opt_state(abs_params):
+    return jax.eval_shape(adamw_init, abs_params)
+
+
+def _named(tree_specs):
+    mesh = active_mesh()
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s if s is not None else P()),
+        tree_specs,
+        is_leaf=lambda s: s is None or isinstance(s, P),
+    )
+
+
+def sharded_params_specs(cfg: ModelConfig, abs_params):
+    """NamedSharding pytree for params (requires active mesh)."""
+    specs = param_specs(abs_params, cfg)
+    return _named(specs)
+
+
+def sharded_opt_specs(cfg: ModelConfig, abs_params):
+    p_specs = param_specs(abs_params, cfg)
+    mesh = active_mesh()
+    return {
+        "m": _named(p_specs),
+        "v": _named(p_specs),
+        "step": NamedSharding(mesh, P()),
+    }
+
+
+def batch_shardings(cfg: ModelConfig, batch_specs: dict):
+    mesh = active_mesh()
+    out = {}
+    for k, v in batch_specs.items():
+        spec = filtered_spec(v.shape, (("pod", "data"),))
+        out[k] = NamedSharding(mesh, spec if spec is not None else P())
+    return out
+
+
+def cache_shardings(cfg: ModelConfig, abs_cache) -> dict:
+    """NamedShardings for a decode cache, keyed on cache entry names."""
+    mesh = active_mesh()
+
+    def spec_for(key: str, leaf):
+        shape = leaf.shape
+        if key == "pos" or leaf.ndim == 0:
+            return P()
+        B = shape[1]
+        if key in ("k", "v", "shared_k", "shared_v", "cross_k", "cross_v"):
+            from ..models.attention import effective_kv_heads
+
+            entries = (None,) + kv_cache_entries(B, effective_kv_heads(cfg))
+        elif key in ("ckv", "kr"):
+            data = mesh.shape.get("data", 1)
+            seq = ("model",) if (data > 1 and B % data == 0) else ("data", "model")
+            entries = (None, ("pod", "data"), seq, None)
+        elif key == "state":
+            entries = (None, ("pod", "data"), "model", None, None)
+        elif key.startswith("conv_"):
+            entries = (None, ("pod", "data"), None, "model")
+        else:
+            entries = (None, ("pod", "data"))
+        spec = filtered_spec(shape, entries)
+        return spec if spec is not None else P()
+
+    return {
+        k: jax.tree.map(lambda l: NamedSharding(mesh, spec_for(k, l)), v)
+        if not isinstance(v, (jax.ShapeDtypeStruct, jax.Array))
+        else NamedSharding(mesh, spec_for(k, v))
+        for k, v in abs_cache.items()
+    }
+
+
+# --------------------------------------------------------------------------
+# end-to-end lowering for one (arch × shape × mesh) combo
+# --------------------------------------------------------------------------
+
+
+def lower_combo(cfg: ModelConfig, shape: InputShape, with_cost: bool = True):
+    """Lower the right step for ``shape`` under the ACTIVE mesh context.
+
+    Returns (lowered, kind, jaxpr_cost) — call ``.compile()`` on the result.
+    ``jaxpr_cost`` is the analytical whole-module FLOP/byte count (see
+    jaxpr_cost.py — XLA's cost_analysis counts scan bodies once, so the
+    roofline uses this instead).
+    """
+    from .jaxpr_cost import Cost, count_fn
+
+    if not model_api.supports(cfg, shape):
+        raise ValueError(f"{cfg.name} does not support {shape.name}")
+
+    if shape.kind == "train":
+        abs_params = abstract_params(cfg)
+        abs_opt = abstract_opt_state(abs_params)
+        batch_specs = model_api.train_input_specs(cfg, shape)
+        step = make_train_step(cfg)
+        jitted = jax.jit(
+            step,
+            in_shardings=(
+                sharded_params_specs(cfg, abs_params),
+                sharded_opt_specs(cfg, abs_params),
+                batch_shardings(cfg, batch_specs),
+            ),
+        )
+        cost = (
+            count_fn(step, abs_params, abs_opt, batch_specs)
+            if with_cost else Cost()
+        )
+        return jitted.lower(abs_params, abs_opt, batch_specs), "train_step", cost
+
+    if shape.kind == "prefill":
+        abs_params = abstract_params(cfg)
+        batch_specs = model_api.train_input_specs(cfg, shape)
+        step = make_prefill_step(cfg)
+        jitted = jax.jit(
+            step,
+            in_shardings=(
+                sharded_params_specs(cfg, abs_params),
+                batch_shardings(cfg, batch_specs),
+            ),
+        )
+        cost = count_fn(step, abs_params, batch_specs) if with_cost else Cost()
+        return jitted.lower(abs_params, batch_specs), "prefill_step", cost
+
+    # decode
+    abs_params = abstract_params(cfg)
+    abs_cache, token_spec = model_api.decode_input_specs(cfg, shape)
+    ring = model_api.decode_is_ring(cfg, shape)
+    step = make_serve_step(cfg, ring=ring)
+    mesh = active_mesh()
+    token_sharding = NamedSharding(
+        mesh,
+        filtered_spec(token_spec.shape, (("pod", "data"), None)) or P(),
+    )
+    jitted = jax.jit(
+        step,
+        in_shardings=(
+            sharded_params_specs(cfg, abs_params),
+            cache_shardings(cfg, abs_cache),
+            token_sharding,
+        ),
+    )
+    cost = (
+        count_fn(step, abs_params, abs_cache, token_spec) if with_cost else Cost()
+    )
+    return jitted.lower(abs_params, abs_cache, token_spec), "serve_step", cost

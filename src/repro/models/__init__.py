@@ -1,0 +1,29 @@
+"""JAX model zoo: the post-training substrate's model definitions.
+
+Families: decoder-only transformer (dense GQA / MLA / MoE / VLM), Mamba2 SSD,
+Zamba2-style hybrid, Seamless-style encoder-decoder.  See ``api.get_family``.
+"""
+
+from .api import (
+    Family,
+    decode_cache_len,
+    decode_input_specs,
+    decode_is_ring,
+    get_family,
+    supports,
+    train_input_specs,
+)
+from .sharding import constrain, param_shardings, param_specs
+
+__all__ = [
+    "Family",
+    "constrain",
+    "decode_cache_len",
+    "decode_input_specs",
+    "decode_is_ring",
+    "get_family",
+    "param_shardings",
+    "param_specs",
+    "supports",
+    "train_input_specs",
+]

@@ -1,0 +1,148 @@
+"""Family dispatch: one uniform surface over all architecture families.
+
+``get_family(cfg)`` returns a ``Family`` exposing::
+
+    init(key, cfg)                      -> params
+    loss(params, batch, cfg)            -> scalar CE(+aux)
+    init_cache(cfg, batch, cache_len)   -> decode cache pytree
+    prefill(params, batch, cfg)         -> (last logits [B,V], cache)
+    decode_step(params, cache, token, cfg, ring) -> (logits [B,V], cache)
+    input_specs(cfg, shape, mesh=None)  -> ShapeDtypeStructs for train/prefill
+    decode_specs(cfg, shape)            -> (cache, token) ShapeDtypeStructs
+
+plus ``supports(shape)`` so the launcher knows e.g. seamless skips long_500k.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import InputShape, ModelConfig
+from . import encdec, hybrid, ssm, transformer
+
+
+@dataclass(frozen=True)
+class Family:
+    name: str
+    init: Callable
+    loss: Callable
+    init_cache: Callable
+    prefill: Callable
+    decode_step: Callable
+
+
+_TRANSFORMER = Family(
+    name="transformer",
+    init=transformer.init,
+    loss=transformer.loss_fn,
+    init_cache=transformer.init_cache,
+    prefill=transformer.prefill,
+    decode_step=transformer.decode_step,
+)
+
+_SSM = Family(
+    name="ssm",
+    init=ssm.init,
+    loss=ssm.loss_fn,
+    init_cache=lambda cfg, batch, cache_len: ssm.init_cache(cfg, batch),
+    prefill=ssm.prefill,
+    decode_step=ssm.decode_step,
+)
+
+_HYBRID = Family(
+    name="hybrid",
+    init=hybrid.init,
+    loss=hybrid.loss_fn,
+    init_cache=hybrid.init_cache,
+    prefill=hybrid.prefill,
+    decode_step=hybrid.decode_step,
+)
+
+_ENCDEC = Family(
+    name="encdec",
+    init=encdec.init,
+    loss=encdec.loss_fn,
+    init_cache=lambda cfg, batch, cache_len: encdec.init_cache(
+        cfg, batch, cache_len, cache_len
+    ),
+    prefill=encdec.prefill,
+    decode_step=encdec.decode_step,
+)
+
+
+def get_family(cfg: ModelConfig) -> Family:
+    if cfg.family in ("dense", "moe", "vlm"):
+        return _TRANSFORMER
+    if cfg.family == "ssm":
+        return _SSM
+    if cfg.family == "hybrid":
+        return _HYBRID
+    if cfg.family in ("encdec", "audio"):
+        return _ENCDEC
+    raise ValueError(f"unknown family {cfg.family}")
+
+
+# --------------------------------------------------------------------------
+# Shape support / cache sizing decisions (DESIGN.md §4)
+# --------------------------------------------------------------------------
+
+
+def supports(cfg: ModelConfig, shape: InputShape) -> bool:
+    if shape.name == "long_500k":
+        if cfg.family in ("encdec", "audio"):
+            return False  # quadratic encoder, no sub-quadratic variant (skip)
+        if cfg.family in ("ssm", "hybrid"):
+            return True  # native O(1)/windowed long context
+        return cfg.sliding_window > 0  # dense/moe/vlm need the window variant
+    return True
+
+
+def decode_cache_len(cfg: ModelConfig, shape: InputShape) -> int:
+    """Ring-buffer length for decode shapes."""
+    if cfg.family in ("ssm",):
+        return 0
+    if shape.seq_len > 32_768 and cfg.sliding_window:
+        return cfg.sliding_window
+    return shape.seq_len
+
+
+def decode_is_ring(cfg: ModelConfig, shape: InputShape) -> bool:
+    return 0 < decode_cache_len(cfg, shape) < shape.seq_len
+
+
+# --------------------------------------------------------------------------
+# ShapeDtypeStruct builders (the dry-run's no-allocation inputs)
+# --------------------------------------------------------------------------
+
+
+def train_input_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    """ShapeDtypeStructs for a train/prefill batch."""
+    B, S = shape.global_batch, shape.seq_len
+    tok = jax.ShapeDtypeStruct
+    if cfg.family in ("encdec", "audio"):
+        return {
+            "frames": tok((B, S, cfg.frontend_dim), jnp.dtype(cfg.compute_dtype)),
+            "tokens": tok((B, S), jnp.int32),
+        }
+    if cfg.family == "vlm" and cfg.frontend_tokens:
+        P = cfg.frontend_tokens
+        return {
+            "patches": tok((B, P, cfg.frontend_dim), jnp.dtype(cfg.compute_dtype)),
+            "tokens": tok((B, S - P), jnp.int32),
+        }
+    return {"tokens": tok((B, S), jnp.int32)}
+
+
+def decode_input_specs(cfg: ModelConfig, shape: InputShape):
+    """(cache_specs, token_spec) for serve_step lowering."""
+    B = shape.global_batch
+    cache_len = decode_cache_len(cfg, shape)
+    fam = get_family(cfg)
+    cache = jax.eval_shape(lambda: fam.init_cache(cfg, B, cache_len))
+    token = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    return cache, token

@@ -1,0 +1,376 @@
+"""Attention mixers: GQA (with optional sliding window) and MLA.
+
+Training/prefill attention is *query-chunked* with an explicit f32 softmax:
+a `lax.scan` over query blocks keeps the live logits buffer at
+``[B, H, q_chunk, S]`` instead of ``[B, H, S, S]`` — the pure-JAX analogue of
+the Pallas flash kernel in ``repro.kernels.flash_attention`` (which is the
+TPU target; this path is what the dry-run and CPU tests lower).
+
+Decode attention runs against a KV cache laid out ``[B, W, KV, hd]``; when
+``W < seq_len`` the cache is a ring buffer (sliding-window attention — how
+dense archs run long_500k).  Cache sharding is decided by
+``sharding.kv_cache_entries`` (heads on the model axis when divisible,
+sequence otherwise).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import apply_rope, dense_init
+from .sharding import constrain, kv_cache_entries
+
+# ==========================================================================
+# GQA
+# ==========================================================================
+
+
+def init_gqa_params(key, cfg) -> dict:
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], D, H * hd, cfg.pdtype),
+        "wk": dense_init(ks[1], D, KV * hd, cfg.pdtype),
+        "wv": dense_init(ks[2], D, KV * hd, cfg.pdtype),
+        "wo": dense_init(ks[3], H * hd, D, cfg.pdtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), cfg.pdtype)
+        p["bk"] = jnp.zeros((KV * hd,), cfg.pdtype)
+        p["bv"] = jnp.zeros((KV * hd,), cfg.pdtype)
+    return p
+
+
+def _qkv(p, x, cfg, positions):
+    B, S, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, KV, hd)
+    v = v.reshape(B, S, KV, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def chunked_causal_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    q_chunk: int,
+    window: int = 0,
+    causal: bool = True,
+) -> jax.Array:
+    """q: [B,S,H,hd], k/v: [B,Skv,KV,hd] → [B,S,H,hd].
+
+    Skv may differ from S (cross-attention); causal masking assumes the two
+    timelines are aligned at position 0 (self-attention use only)."""
+    B, S, H, hd = q.shape
+    Skv = k.shape[1]
+    KV = k.shape[2]
+    vd = v.shape[3]  # v head dim may differ from q/k (MLA)
+    G = H // KV
+    scale = hd ** -0.5
+    qg = q.reshape(B, S, KV, G, hd)
+
+    cols = jnp.arange(Skv)
+
+    def block(q_blk: jax.Array, row0: jax.Array) -> jax.Array:
+        # q_blk: [B, C, KV, G, hd]
+        C = q_blk.shape[1]
+        logits = jnp.einsum(
+            "bckgh,bskh->bkgcs", q_blk, k, preferred_element_type=jnp.float32
+        ) * scale
+        rows = row0 + jnp.arange(C)
+        mask = jnp.ones((C, Skv), dtype=bool)
+        if causal:
+            mask &= cols[None, :] <= rows[:, None]
+        if window:
+            mask &= cols[None, :] > rows[:, None] - window
+        logits = jnp.where(mask, logits, -1e30)
+        w = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bkgcs,bskh->bckgh", w.astype(v.dtype), v)
+        return out.reshape(B, C, H, vd)
+
+    if S <= q_chunk or S % q_chunk != 0:
+        return block(qg, jnp.int32(0))
+
+    n = S // q_chunk
+    qs = qg.reshape(B, n, q_chunk, KV, G, hd).transpose(1, 0, 2, 3, 4, 5)
+
+    def step(_, inp):
+        q_blk, i = inp
+        return None, block(q_blk, i * q_chunk)
+
+    _, outs = jax.lax.scan(step, None, (qs, jnp.arange(n)))
+    # outs: [n, B, C, H, vd] → [B, S, H, vd]
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, vd)
+
+
+def gqa_forward(
+    p: dict,
+    x: jax.Array,
+    cfg,
+    window: int = 0,
+    return_kv: bool = False,
+):
+    """Training/prefill attention.  Returns (out, (k, v) | None)."""
+    B, S, _ = x.shape
+    positions = jnp.arange(S)[None, :]
+    q, k, v = _qkv(p, x, cfg, positions)
+    q = constrain(q, ("pod", "data"), None, "model", None)
+    if cfg.seq_parallel:
+        # Under sequence parallelism the incoming stream is seq-sharded on
+        # the model axis; pinning K/V to (fewer-than-mesh) KV heads forces
+        # GSPMD into an "involuntary full rematerialization" reshard (§Perf
+        # iteration 1 finding).  Leave K/V replicated along S instead.
+        k = constrain(k, ("pod", "data"), None, None, None)
+        v = constrain(v, ("pod", "data"), None, None, None)
+    else:
+        k = constrain(k, ("pod", "data"), None, "model", None)
+    if cfg.use_pallas and S % 128 == 0:
+        from ..kernels.ops import flash_attention_trainable
+
+        out = flash_attention_trainable(q, k, v, True, window)
+    else:
+        out = chunked_causal_attention(q, k, v, cfg.attn_q_chunk, window=window)
+    out = out.reshape(B, S, -1) @ p["wo"]
+    if return_kv:
+        return out, (maybe_pad_kv(k, cfg), maybe_pad_kv(v, cfg))
+    return out, None
+
+
+def bidirectional_forward(p: dict, x: jax.Array, cfg) -> jax.Array:
+    """Encoder self-attention (no causal mask) — Seamless encoder."""
+    B, S, _ = x.shape
+    positions = jnp.arange(S)[None, :]
+    q, k, v = _qkv(p, x, cfg, positions)
+    out = chunked_causal_attention(q, k, v, cfg.attn_q_chunk, causal=False)
+    return out.reshape(B, S, -1) @ p["wo"]
+
+
+def cross_attention_forward(
+    p: dict, x: jax.Array, mem_k: jax.Array, mem_v: jax.Array, cfg
+) -> jax.Array:
+    """Decoder cross-attention over precomputed encoder K/V (no RoPE)."""
+    B, S, D = x.shape
+    H, hd = cfg.n_heads, cfg.resolved_head_dim
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    if cfg.qkv_bias:
+        q = q + p["bq"].reshape(H, hd)
+    out = chunked_causal_attention(q, mem_k, mem_v, cfg.attn_q_chunk, causal=False)
+    return out.reshape(B, S, -1) @ p["wo"]
+
+
+def cross_kv(p: dict, mem: jax.Array, cfg) -> Tuple[jax.Array, jax.Array]:
+    B, S, _ = mem.shape
+    KV, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    k = (mem @ p["wk"]).reshape(B, S, KV, hd)
+    v = (mem @ p["wv"]).reshape(B, S, KV, hd)
+    if cfg.qkv_bias:
+        k = k + p["bk"].reshape(KV, hd)
+        v = v + p["bv"].reshape(KV, hd)
+    return k, v
+
+
+def effective_kv_heads(cfg) -> int:
+    """KV head count in the decode cache (≥ real count if padding is on)."""
+    kv = cfg.n_kv_heads
+    if cfg.kv_head_pad_to and cfg.kv_head_pad_to > kv:
+        assert cfg.kv_head_pad_to % kv == 0 and cfg.n_heads % cfg.kv_head_pad_to == 0
+        return cfg.kv_head_pad_to
+    return kv
+
+
+def maybe_pad_kv(t: jax.Array, cfg) -> jax.Array:
+    """Replicate KV heads [..., KV, hd] → [..., KV_eff, hd] (§Perf knob)."""
+    kv_eff = effective_kv_heads(cfg)
+    if kv_eff == cfg.n_kv_heads:
+        return t
+    return jnp.repeat(t, kv_eff // cfg.n_kv_heads, axis=-2)
+
+
+def gqa_decode(
+    p: dict,
+    x: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    pos: jax.Array,
+    cfg,
+    ring: bool = False,
+    rope: bool = True,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode against a [B, W, KV_eff, hd] cache.
+
+    ``ring=True`` (cache shorter than the stream) ⇒ sliding-window ring
+    buffer.  Returns (out [B,1,D], k_cache, v_cache).
+    """
+    B = x.shape[0]
+    H, hd = cfg.n_heads, cfg.resolved_head_dim
+    KV = effective_kv_heads(cfg)
+    W = k_cache.shape[1]
+    positions = jnp.full((B, 1), pos, dtype=jnp.int32)
+    if rope:
+        q, k_new, v_new = _qkv(p, x, cfg, positions)
+    else:
+        q = (x @ p["wq"]).reshape(B, 1, H, hd)
+        k_new = (x @ p["wk"]).reshape(B, 1, cfg.n_kv_heads, hd)
+        v_new = (x @ p["wv"]).reshape(B, 1, cfg.n_kv_heads, hd)
+    k_new = maybe_pad_kv(k_new, cfg)
+    v_new = maybe_pad_kv(v_new, cfg)
+    write_idx = jax.lax.rem(pos, W) if ring else pos
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k_new, (0, write_idx, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v_new, (0, write_idx, 0, 0))
+    slots = jnp.arange(W)
+    valid = (slots <= pos) if not ring else ((slots <= pos) | (pos >= W))
+    G = H // KV
+    qg = q.reshape(B, KV, G, hd)
+    logits = jnp.einsum(
+        "bkgh,bskh->bkgs", qg, k_cache, preferred_element_type=jnp.float32
+    ) * (hd ** -0.5)
+    logits = jnp.where(valid[None, None, None, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", w.astype(v_cache.dtype), v_cache)
+    out = out.reshape(B, 1, H * hd) @ p["wo"]
+    return out, k_cache, v_cache
+
+
+def init_kv_cache(cfg, batch: int, cache_len: int, n_layers: int, dtype):
+    KV, hd = effective_kv_heads(cfg), cfg.resolved_head_dim
+    shape = (n_layers, batch, cache_len, KV, hd)
+    return jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)
+
+
+def constrain_kv_cache(k_cache: jax.Array, cfg) -> jax.Array:
+    """Apply the adaptive cache sharding (heads vs sequence on model axis)."""
+    n_layers, B = k_cache.shape[0], k_cache.shape[1]
+    entries = kv_cache_entries(B, effective_kv_heads(cfg))
+    return constrain(k_cache, None, *entries)
+
+
+# ==========================================================================
+# MLA (MiniCPM3 / DeepSeek-V2-style Multi-head Latent Attention)
+# ==========================================================================
+
+
+def init_mla_params(key, cfg) -> dict:
+    D, H = cfg.d_model, cfg.n_heads
+    qk = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    ks = jax.random.split(key, 5)
+    return {
+        "wdq": dense_init(ks[0], D, cfg.q_lora_rank, cfg.pdtype),
+        "wuq": dense_init(ks[1], cfg.q_lora_rank, H * qk, cfg.pdtype),
+        # joint down-projection: [latent ckv | rope k] per token
+        "wdkv": dense_init(
+            ks[2], D, cfg.kv_lora_rank + cfg.qk_rope_head_dim, cfg.pdtype
+        ),
+        "wukv": dense_init(
+            ks[3],
+            cfg.kv_lora_rank,
+            H * (cfg.qk_nope_head_dim + cfg.v_head_dim),
+            cfg.pdtype,
+        ),
+        "wo": dense_init(ks[4], H * cfg.v_head_dim, D, cfg.pdtype),
+    }
+
+
+def _mla_q(p, x, cfg, positions):
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    q = (x @ p["wdq"]) @ p["wuq"]
+    q = q.reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_latent(p, x, cfg, positions):
+    B, S, _ = x.shape
+    dkv = x @ p["wdkv"]  # [B, S, kvr + dr]
+    ckv, k_rope = dkv[..., : cfg.kv_lora_rank], dkv[..., cfg.kv_lora_rank :]
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return ckv, k_rope
+
+
+def mla_forward(p: dict, x: jax.Array, cfg, return_kv: bool = False):
+    """Training/prefill MLA via naive latent expansion (prefill is
+    compute-bound anyway); decode uses the absorbed form."""
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    positions = jnp.arange(S)[None, :]
+    q_nope, q_rope = _mla_q(p, x, cfg, positions)
+    ckv, k_rope = _mla_latent(p, x, cfg, positions)
+    kv = (ckv @ p["wukv"]).reshape(B, S, H, dn + dv)
+    k_nope, v = kv[..., :dn], kv[..., dn:]
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, dr))], axis=-1
+    )
+    out = chunked_causal_attention(q, k, v, cfg.attn_q_chunk)
+    out = out.reshape(B, S, H * dv) @ p["wo"]
+    return (out, (ckv, k_rope)) if return_kv else (out, None)
+
+
+def mla_decode(
+    p: dict,
+    x: jax.Array,
+    ckv_cache: jax.Array,
+    kr_cache: jax.Array,
+    pos: jax.Array,
+    cfg,
+    ring: bool = False,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Absorbed-weight MLA decode over the compressed latent cache.
+
+    ckv_cache: [B, W, kvr]; kr_cache: [B, W, dr].
+    """
+    B = x.shape[0]
+    H = cfg.n_heads
+    dn, dr, dv, kvr = (
+        cfg.qk_nope_head_dim,
+        cfg.qk_rope_head_dim,
+        cfg.v_head_dim,
+        cfg.kv_lora_rank,
+    )
+    W = ckv_cache.shape[1]
+    positions = jnp.full((B, 1), pos, dtype=jnp.int32)
+    q_nope, q_rope = _mla_q(p, x, cfg, positions)  # [B,1,H,·]
+    ckv_new, kr_new = _mla_latent(p, x, cfg, positions)  # [B,1,kvr], [B,1,dr]
+    write_idx = jax.lax.rem(pos, W) if ring else pos
+    ckv_cache = jax.lax.dynamic_update_slice(ckv_cache, ckv_new, (0, write_idx, 0))
+    kr_cache = jax.lax.dynamic_update_slice(kr_cache, kr_new, (0, write_idx, 0))
+
+    wukv = p["wukv"].reshape(kvr, H, dn + dv)
+    w_uk, w_uv = wukv[..., :dn], wukv[..., dn:]
+    # absorb: q_abs[b,h,r] = Σ_d q_nope[b,h,d] · w_uk[r,h,d]
+    q_abs = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], w_uk)
+    scores = jnp.einsum(
+        "bhr,bsr->bhs", q_abs, ckv_cache, preferred_element_type=jnp.float32
+    )
+    scores += jnp.einsum(
+        "bhd,bsd->bhs", q_rope[:, 0], kr_cache, preferred_element_type=jnp.float32
+    )
+    scores *= (dn + dr) ** -0.5
+    slots = jnp.arange(W)
+    valid = (slots <= pos) if not ring else ((slots <= pos) | (pos >= W))
+    scores = jnp.where(valid[None, None, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhs,bsr->bhr", w.astype(ckv_cache.dtype), ckv_cache)
+    v_out = jnp.einsum("bhr,rhd->bhd", ctx, w_uv)  # [B,H,dv]
+    out = v_out.reshape(B, 1, H * dv) @ p["wo"]
+    return out, ckv_cache, kr_cache
+
+
+def init_mla_cache(cfg, batch: int, cache_len: int, n_layers: int, dtype):
+    ckv = jnp.zeros((n_layers, batch, cache_len, cfg.kv_lora_rank), dtype)
+    kr = jnp.zeros((n_layers, batch, cache_len, cfg.qk_rope_head_dim), dtype)
+    return ckv, kr

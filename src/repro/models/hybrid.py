@@ -1,0 +1,221 @@
+"""Zamba2-style hybrid: Mamba2 backbone + SHARED attention block.
+
+One attention+MLP block's weights are shared across its interleaved
+invocations (before every group of ``attn_every`` Mamba2 layers) — the
+Zamba/Zamba2 design [arXiv:2411.15242].  Mamba layers are scanned per group;
+the outer loop over groups is unrolled (n_layers/attn_every ≈ 9 iterations).
+
+Decode: the shared block keeps a KV cache per invocation *site*
+([n_sites, B, W, KV, hd], ring-capable — sliding window at 500k), the Mamba
+layers keep O(1) SSD state.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from .layers import cross_entropy, dense_init, embed_init, rmsnorm
+from .mamba2 import (
+    init_mamba2_cache,
+    init_mamba2_params,
+    mamba2_decode,
+    mamba2_forward,
+)
+from .sharding import constrain
+
+
+def n_sites(cfg) -> int:
+    return cfg.n_layers // cfg.attn_every
+
+
+def _init_mamba_layer(key, cfg) -> dict:
+    return {
+        "ln": {"scale": jnp.ones((cfg.d_model,), cfg.pdtype)},
+        "mixer": init_mamba2_params(key, cfg),
+    }
+
+
+def init(key, cfg) -> dict:
+    ke, kh, kl, ks, k1, k2, k3 = jax.random.split(key, 7)
+    V = cfg.padded_vocab
+    return {
+        "embed": {"table": embed_init(ke, V, cfg.d_model, cfg.pdtype)},
+        "lm_head": {"head_w": dense_init(kh, cfg.d_model, V, cfg.pdtype)},
+        "final_norm": {"scale": jnp.ones((cfg.d_model,), cfg.pdtype)},
+        "layers": jax.vmap(lambda k: _init_mamba_layer(k, cfg))(
+            jax.random.split(kl, cfg.n_layers)
+        ),
+        # ONE shared attention+MLP block (weights reused at every site).
+        "shared": {
+            "ln1": {"scale": jnp.ones((cfg.d_model,), cfg.pdtype)},
+            "ln2": {"scale": jnp.ones((cfg.d_model,), cfg.pdtype)},
+            "attn": attn.init_gqa_params(ks, cfg),
+            "mlp": {
+                "w1": dense_init(k1, cfg.d_model, cfg.d_ff, cfg.pdtype),
+                "w3": dense_init(k2, cfg.d_model, cfg.d_ff, cfg.pdtype),
+                "w2": dense_init(k3, cfg.d_ff, cfg.d_model, cfg.pdtype),
+            },
+        },
+    }
+
+
+def _mlp(p, x):
+    return (jax.nn.silu(x @ p["w1"]) * (x @ p["w3"])) @ p["w2"]
+
+
+def _shared_forward(params, x, cfg, window: int, collect: bool):
+    sp = params["shared"]
+    h, kv = attn.gqa_forward(
+        sp["attn"], rmsnorm(x, sp["ln1"]["scale"], cfg.norm_eps), cfg,
+        window=window, return_kv=collect,
+    )
+    x = x + h
+    x = x + _mlp(sp["mlp"], rmsnorm(x, sp["ln2"]["scale"], cfg.norm_eps))
+    return constrain(x, ("pod", "data"), None, None), kv
+
+
+def _grouped(params_layers, cfg):
+    """Reshape stacked [L, ...] mamba params to [G, per, ...]."""
+    G = n_sites(cfg)
+    per = cfg.n_layers // G
+    return jax.tree.map(
+        lambda t: t.reshape((G, per) + t.shape[1:]), params_layers
+    ), G, per
+
+
+def _mamba_group(group_params, x, cfg, collect: bool):
+    def body(carry, lp):
+        h, cache = mamba2_forward(
+            lp["mixer"], rmsnorm(carry, lp["ln"]["scale"], cfg.norm_eps), cfg,
+            return_state=collect,
+        )
+        return constrain(carry + h, ("pod", "data"), None, None), cache
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    return jax.lax.scan(body, x, group_params)
+
+
+def _forward(params, x, cfg, window: int, collect: bool = False):
+    grouped, G, per = _grouped(params["layers"], cfg)
+    shared_kvs, mamba_caches = [], []
+    for g in range(G):
+        x, kv = _shared_forward(params, x, cfg, window, collect)
+        gp = jax.tree.map(lambda t: t[g], grouped)
+        x, caches = _mamba_group(gp, x, cfg, collect)
+        if collect:
+            shared_kvs.append(kv)
+            mamba_caches.append(caches)
+    if not collect:
+        return x, None
+    kv_stacked = jax.tree.map(lambda *ts: jnp.stack(ts), *shared_kvs)
+    mamba_stacked = jax.tree.map(
+        lambda *ts: jnp.concatenate(ts, axis=0), *mamba_caches
+    )
+    return x, (kv_stacked, mamba_stacked)
+
+
+def _train_window(cfg, S: int) -> int:
+    w = cfg.sliding_window
+    return w if 0 < w < S else 0
+
+
+def loss_fn(params, batch: dict, cfg) -> jax.Array:
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"]["table"], tokens, axis=0).astype(cfg.cdtype)
+    x, _ = _forward(params, x, cfg, _train_window(cfg, x.shape[1]))
+    x = rmsnorm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    logits = x @ params["lm_head"]["head_w"]
+    logits = constrain(logits, ("pod", "data"), None, "model")
+    return cross_entropy(
+        logits[:, :-1], tokens[:, 1:], mask=batch.get("loss_mask"),
+        true_vocab=cfg.vocab_size,
+    )
+
+
+def init_cache(cfg, batch: int, cache_len: int) -> dict:
+    KV, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    G = n_sites(cfg)
+    mamba = init_mamba2_cache(cfg, batch, cfg.n_layers, cfg.cdtype)
+    return {
+        "shared_k": jnp.zeros((G, batch, cache_len, KV, hd), cfg.cdtype),
+        "shared_v": jnp.zeros((G, batch, cache_len, KV, hd), cfg.cdtype),
+        **mamba,
+        "pos": jnp.int32(0),
+    }
+
+
+def prefill(params, batch: dict, cfg, pad_to=None) -> Tuple[jax.Array, dict]:
+    from .transformer import _pad_seq
+
+    tokens = batch["tokens"]
+    S = tokens.shape[1]
+    x = jnp.take(params["embed"]["table"], tokens, axis=0).astype(cfg.cdtype)
+    x, caches = _forward(params, x, cfg, _train_window(cfg, S), collect=True)
+    (k, v), (cx, cB, cC, st) = caches
+    x = rmsnorm(x[:, -1:], params["final_norm"]["scale"], cfg.norm_eps)
+    logits = (x @ params["lm_head"]["head_w"])[:, 0]
+    cache = {
+        "shared_k": _pad_seq(k, pad_to), "shared_v": _pad_seq(v, pad_to),
+        "conv_x": cx, "conv_B": cB, "conv_C": cC, "state": st,
+        "pos": jnp.int32(S),
+    }
+    return logits, cache
+
+
+def decode_step(params, cache: dict, token: jax.Array, cfg, ring: bool = False):
+    pos = cache["pos"]
+    x = jnp.take(params["embed"]["table"], token, axis=0).astype(cfg.cdtype)
+    grouped, G, per = _grouped(params["layers"], cfg)
+
+    def regroup(t):
+        return t.reshape((G, per) + t.shape[1:])
+
+    cx, cB, cC, st = (
+        regroup(cache["conv_x"]), regroup(cache["conv_B"]),
+        regroup(cache["conv_C"]), regroup(cache["state"]),
+    )
+    new_k, new_v = [], []
+    new_caches = []
+    sp = params["shared"]
+    for g in range(G):
+        h_in = rmsnorm(x, sp["ln1"]["scale"], cfg.norm_eps)
+        h, k_g, v_g = attn.gqa_decode(
+            sp["attn"], h_in, cache["shared_k"][g], cache["shared_v"][g],
+            pos, cfg, ring=ring,
+        )
+        x = x + h
+        x = x + _mlp(sp["mlp"], rmsnorm(x, sp["ln2"]["scale"], cfg.norm_eps))
+        new_k.append(k_g)
+        new_v.append(v_g)
+
+        gp = jax.tree.map(lambda t: t[g], grouped)
+
+        def body(carry, scan_in):
+            lp, a, b, c, s = scan_in
+            h, (a, b, c, s) = mamba2_decode(
+                lp["mixer"], rmsnorm(carry, lp["ln"]["scale"], cfg.norm_eps),
+                a, b, c, s, cfg,
+            )
+            return carry + h, (a, b, c, s)
+
+        x, caches_g = jax.lax.scan(
+            body, x, (gp, cx[g], cB[g], cC[g], st[g])
+        )
+        new_caches.append(caches_g)
+
+    cxn, cBn, cCn, stn = jax.tree.map(
+        lambda *ts: jnp.concatenate(ts, axis=0), *new_caches
+    )
+    x = rmsnorm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    logits = (x @ params["lm_head"]["head_w"])[:, 0]
+    new_cache = {
+        "shared_k": jnp.stack(new_k), "shared_v": jnp.stack(new_v),
+        "conv_x": cxn, "conv_B": cBn, "conv_C": cCn, "state": stn,
+        "pos": pos + 1,
+    }
+    return logits, new_cache

@@ -1,0 +1,123 @@
+"""Shared building blocks: norms, RoPE, initializers, losses."""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# -- init ----------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> jax.Array:
+    scale = (1.0 / d_in) ** 0.5
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+def stacked_dense_init(key, n: int, d_in: int, d_out: int, dtype) -> jax.Array:
+    scale = (1.0 / d_in) ** 0.5
+    return (jax.random.normal(key, (n, d_in, d_out)) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+# -- RMSNorm -----------------------------------------------------------------
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * scale.astype(jnp.float32)).astype(dt)
+
+
+# -- RoPE ------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., seq, heads, head_dim]; positions: [..., seq] (int)."""
+    freqs = rope_freqs(x.shape[-1], theta)  # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    cos = jnp.cos(angles)[..., :, None, :]  # [..., S, 1, hd/2]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- losses ---------------------------------------------------------------------
+
+
+def cross_entropy(
+    logits: jax.Array,
+    labels: jax.Array,
+    mask: Optional[jax.Array] = None,
+    true_vocab: Optional[int] = None,
+) -> jax.Array:
+    """Mean next-token CE.  ``true_vocab`` masks vocab-padding logits."""
+    logits = logits.astype(jnp.float32)
+    if true_vocab is not None and true_vocab < logits.shape[-1]:
+        pad_mask = jnp.arange(logits.shape[-1]) >= true_vocab
+        logits = jnp.where(pad_mask, -1e9, logits)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def log_softmax_gather(logits: jax.Array, ids: jax.Array,
+                       true_vocab: Optional[int] = None) -> jax.Array:
+    """log p(ids) under ``logits`` — used by GRPO importance ratios."""
+    logits = logits.astype(jnp.float32)
+    if true_vocab is not None and true_vocab < logits.shape[-1]:
+        pad_mask = jnp.arange(logits.shape[-1]) >= true_vocab
+        logits = jnp.where(pad_mask, -1e9, logits)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, ids[..., None], axis=-1)[..., 0]
+    return gold - logz
+
+
+# -- misc --------------------------------------------------------------------------
+
+
+def swiglu(x1: jax.Array, x3: jax.Array) -> jax.Array:
+    return jax.nn.silu(x1) * x3
+
+
+def causal_depthwise_conv(
+    x: jax.Array, w: jax.Array, b: jax.Array
+) -> jax.Array:
+    """Causal depthwise 1-D conv via K shifted adds (K is tiny, e.g. 4).
+
+    x: [B, S, C]; w: [K, C]; b: [C].
+    """
+    K = w.shape[0]
+    out = x * w[K - 1]
+    for k in range(1, K):
+        shifted = jnp.pad(x, ((0, 0), (k, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + shifted * w[K - 1 - k]
+    return out + b
+
+
+def conv_decode_step(
+    x_t: jax.Array, conv_state: jax.Array, w: jax.Array, b: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """One decode step of the causal conv.
+
+    x_t: [B, C]; conv_state: [B, K-1, C] (previous inputs, oldest first).
+    Returns (y_t [B, C], new_conv_state).
+    """
+    window = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # [B,K,C]
+    y = jnp.einsum("bkc,kc->bc", window, w) + b
+    return y, window[:, 1:]

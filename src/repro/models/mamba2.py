@@ -1,0 +1,264 @@
+"""Mamba2 SSD (state-space duality) mixer — arXiv:2405.21060.
+
+Training/prefill uses the chunked SSD algorithm: quadratic attention-like
+compute *within* chunks (MXU-friendly — this is the TPU adaptation of the
+paper's GPU kernel, see ``repro.kernels.mamba_ssd`` for the Pallas target)
+plus a linear recurrence *across* chunk states via ``lax.scan``.  Decode is
+the O(1) recurrence ``h ← exp(dt·A)·h + dt·(B ⊗ x)``.
+
+The mixer follows the Mamba2 block: separate z/x/B/C/dt projections (split
+projections shard cleanly — DESIGN.md §5), causal depthwise conv on x/B/C,
+softplus(dt + bias), gated RMSNorm, output projection.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import causal_depthwise_conv, conv_decode_step, dense_init
+from .sharding import constrain
+
+
+def init_mamba2_params(key, cfg) -> dict:
+    D = cfg.d_model
+    din = cfg.d_inner
+    H, P, N, G, K = (
+        cfg.ssm_heads,
+        cfg.ssm_head_dim,
+        cfg.ssm_state,
+        cfg.ssm_groups,
+        cfg.ssm_conv,
+    )
+    ks = jax.random.split(key, 10)
+    dt = jnp.exp(
+        jax.random.uniform(ks[0], (H,)) * (math.log(0.1) - math.log(0.001))
+        + math.log(0.001)
+    )
+    return {
+        "wz": dense_init(ks[1], D, din, cfg.pdtype),
+        "wx": dense_init(ks[2], D, din, cfg.pdtype),
+        "wB": dense_init(ks[3], D, G * N, cfg.pdtype),
+        "wC": dense_init(ks[4], D, G * N, cfg.pdtype),
+        "wdt": dense_init(ks[5], D, H, cfg.pdtype),
+        "conv_wx": (jax.random.normal(ks[6], (K, din)) * (1 / K) ** 0.5).astype(cfg.pdtype),
+        "conv_bx": jnp.zeros((din,), cfg.pdtype),
+        "conv_wB": (jax.random.normal(ks[7], (K, G * N)) * (1 / K) ** 0.5).astype(cfg.pdtype),
+        "conv_bB": jnp.zeros((G * N,), cfg.pdtype),
+        "conv_wC": (jax.random.normal(ks[8], (K, G * N)) * (1 / K) ** 0.5).astype(cfg.pdtype),
+        "conv_bC": jnp.zeros((G * N,), cfg.pdtype),
+        "A_log": jnp.log(
+            jax.random.uniform(ks[9], (H,), minval=1.0, maxval=16.0)
+        ).astype(jnp.float32),
+        "dt_bias": (dt + jnp.log(-jnp.expm1(-dt))).astype(jnp.float32),
+        "Dskip": jnp.ones((H,), cfg.pdtype),
+        "gnorm": jnp.ones((din,), cfg.pdtype),
+        "out_proj": dense_init(ks[0], din, D, cfg.pdtype),
+    }
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """a: [..., Q] → [..., Q, Q]: Σ_{k=j+1..i} a_k for i ≥ j, −inf above."""
+    Q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    s = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.arange(Q)[:, None] >= jnp.arange(Q)[None, :]
+    return jnp.where(mask, s, -jnp.inf)
+
+
+def _projections(p: dict, x: jax.Array, cfg):
+    """Shared z/x/B/C/dt projection + conv + activations."""
+    B_, S, _ = x.shape
+    H, P, N, G = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
+    z = x @ p["wz"]
+    xin_raw = x @ p["wx"]
+    B_raw = x @ p["wB"]
+    C_raw = x @ p["wC"]
+    dt_raw = x @ p["wdt"]
+    xin = jax.nn.silu(causal_depthwise_conv(xin_raw, p["conv_wx"], p["conv_bx"]))
+    Bm = jax.nn.silu(causal_depthwise_conv(B_raw, p["conv_wB"], p["conv_bB"]))
+    Cm = jax.nn.silu(causal_depthwise_conv(C_raw, p["conv_wC"], p["conv_bC"]))
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # [B,S,H]
+    xh = xin.reshape(B_, S, H, P)
+    Bh = jnp.broadcast_to(
+        Bm.reshape(B_, S, G, N)[:, :, :, None, :], (B_, S, G, H // G, N)
+    ).reshape(B_, S, H, N)
+    Ch = jnp.broadcast_to(
+        Cm.reshape(B_, S, G, N)[:, :, :, None, :], (B_, S, G, H // G, N)
+    ).reshape(B_, S, H, N)
+    return z, xh, Bh, Ch, dt, (xin_raw, B_raw, C_raw)
+
+
+def _gated_out(p: dict, y: jax.Array, z: jax.Array, cfg) -> jax.Array:
+    """Gated RMSNorm + output projection."""
+    B_, S = y.shape[0], y.shape[1]
+    din = cfg.d_inner
+    g = y.reshape(B_, S, din) * jax.nn.silu(z)
+    gf = g.astype(jnp.float32)
+    gf = gf * jax.lax.rsqrt(jnp.mean(gf * gf, axis=-1, keepdims=True) + cfg.norm_eps)
+    g = (gf * p["gnorm"].astype(jnp.float32)).astype(y.dtype)
+    return g @ p["out_proj"]
+
+
+def ssd_chunked(
+    xh: jax.Array,
+    dt: jax.Array,
+    A: jax.Array,
+    Bh: jax.Array,
+    Ch: jax.Array,
+    chunk: int,
+    initial_state=None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    xh: [B,S,H,P], dt: [B,S,H], A: [H] (negative), Bh/Ch: [B,S,H,N].
+    Returns (y [B,S,H,P], final_state [B,H,P,N]).
+    """
+    B_, S, H, P = xh.shape
+    N = Bh.shape[-1]
+    Q = chunk if S % chunk == 0 else math.gcd(S, chunk)
+    Nc = S // Q
+
+    xdt = (xh.astype(jnp.float32) * dt[..., None]).astype(jnp.float32)
+    dA = dt * A  # [B,S,H] (negative)
+
+    def chunked(t):  # [B,S,...] → [B,Nc,Q,...]
+        return t.reshape((B_, Nc, Q) + t.shape[2:])
+
+    xc, Bc, Cc = chunked(xdt), chunked(Bh.astype(jnp.float32)), chunked(Ch.astype(jnp.float32))
+    dAc = chunked(dA).transpose(0, 3, 1, 2)  # [B,H,Nc,Q]
+    dA_cum = jnp.cumsum(dAc, axis=-1)  # [B,H,Nc,Q]
+
+    # Intra-chunk (quadratic, MXU-friendly): Y_diag.
+    L = jnp.exp(_segsum(dAc))  # [B,H,Nc,Q,Q]
+    Y_diag = jnp.einsum("bcqhn,bcshn,bhcqs,bcshp->bcqhp", Cc, Bc, L, xc)
+
+    # Per-chunk end states.
+    decay_states = jnp.exp(dA_cum[..., -1:] - dA_cum)  # [B,H,Nc,Q]
+    states = jnp.einsum("bcshn,bhcs,bcshp->bchpn", Bc, decay_states, xc)
+
+    # Inter-chunk recurrence (linear scan over chunks).
+    chunk_decay = jnp.exp(dA_cum[..., -1])  # [B,H,Nc]
+    init = (
+        jnp.zeros((B_, H, P, N), jnp.float32)
+        if initial_state is None
+        else initial_state.astype(jnp.float32)
+    )
+
+    def step(h, inp):
+        st, dec = inp  # [B,H,P,N], [B,H]
+        h_new = dec[..., None, None] * h + st
+        return h_new, h  # emit PREVIOUS state for Y_off
+
+    _, prev_states = jax.lax.scan(
+        step,
+        init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(2, 0, 1)),
+    )
+    final_state, _ = step(
+        prev_states[-1], (states[:, -1], chunk_decay[..., -1])
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # [B,Nc,H,P,N]
+
+    # Inter-chunk contribution.
+    state_decay = jnp.exp(dA_cum)  # [B,H,Nc,Q]
+    Y_off = jnp.einsum("bcqhn,bchpn,bhcq->bcqhp", Cc, prev_states, state_decay)
+
+    y = (Y_diag + Y_off).reshape(B_, S, H, P)
+    return y, final_state
+
+
+def mamba2_forward(
+    p: dict, x: jax.Array, cfg, return_state: bool = False
+):
+    """Training/prefill pass.  Returns (out, cache_tuple | None) where
+    cache_tuple = (conv_x, conv_B, conv_C, ssm_state)."""
+    B_, S, _ = x.shape
+    H, P, K = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_conv
+    z, xh, Bh, Ch, dt, raws = _projections(p, x, cfg)
+    xh = constrain(xh, ("pod", "data"), None, "model", None)
+    A = -jnp.exp(p["A_log"])  # [H]
+    if cfg.use_pallas and S % cfg.ssm_chunk == 0:
+        from ..kernels import ssd as _ssd_kernel
+
+        y, final_state = _ssd_kernel(xh, dt, A, Bh, Ch, chunk=cfg.ssm_chunk)
+        y = y.astype(jnp.float32)
+    else:
+        y, final_state = ssd_chunked(xh, dt, A, Bh, Ch, cfg.ssm_chunk)
+    y = y + xh.astype(jnp.float32) * p["Dskip"].astype(jnp.float32)[None, None, :, None]
+    out = _gated_out(p, y.astype(x.dtype), z, cfg)
+    if not return_state:
+        return out, None
+
+    def tail(t):  # last K-1 inputs (zero-padded on the left)
+        pad = jnp.zeros((B_, max(K - 1 - S, 0), t.shape[-1]), t.dtype)
+        return jnp.concatenate([pad, t[:, max(S - (K - 1), 0):]], axis=1)
+
+    xin_raw, B_raw, C_raw = raws
+    cache = (tail(xin_raw), tail(B_raw), tail(C_raw), final_state)
+    return out, cache
+
+
+def mamba2_decode(
+    p: dict,
+    x: jax.Array,
+    conv_x: jax.Array,
+    conv_B: jax.Array,
+    conv_C: jax.Array,
+    state: jax.Array,
+    cfg,
+):
+    """One-token decode.  x: [B,1,D]; state: [B,H,P,N] (f32).
+
+    Returns (out [B,1,D], (conv_x, conv_B, conv_C, state))."""
+    B_ = x.shape[0]
+    H, P, N, G = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
+    xt = x[:, 0]
+    z = xt @ p["wz"]
+    xin_raw = xt @ p["wx"]
+    B_raw = xt @ p["wB"]
+    C_raw = xt @ p["wC"]
+    dt_raw = xt @ p["wdt"]
+    xin, conv_x = conv_decode_step(xin_raw, conv_x, p["conv_wx"], p["conv_bx"])
+    Bm, conv_B = conv_decode_step(B_raw, conv_B, p["conv_wB"], p["conv_bB"])
+    Cm, conv_C = conv_decode_step(C_raw, conv_C, p["conv_wC"], p["conv_bC"])
+    xin, Bm, Cm = jax.nn.silu(xin), jax.nn.silu(Bm), jax.nn.silu(Cm)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # [B,H]
+    A = -jnp.exp(p["A_log"])
+
+    xh = xin.reshape(B_, H, P).astype(jnp.float32)
+    Bh = jnp.broadcast_to(
+        Bm.reshape(B_, G, 1, N), (B_, G, H // G, N)
+    ).reshape(B_, H, N).astype(jnp.float32)
+    Ch = jnp.broadcast_to(
+        Cm.reshape(B_, G, 1, N), (B_, G, H // G, N)
+    ).reshape(B_, H, N).astype(jnp.float32)
+
+    decay = jnp.exp(dt * A)  # [B,H]
+    state = decay[..., None, None] * state + jnp.einsum(
+        "bh,bhp,bhn->bhpn", dt, xh, Bh
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", state, Ch)
+    y = y + xh * p["Dskip"].astype(jnp.float32)[None, :, None]
+    out = _gated_out(p, y[:, None].astype(x.dtype), z[:, None], cfg)
+    return out, (conv_x, conv_B, conv_C, state)
+
+
+def init_mamba2_cache(cfg, batch: int, n_layers: int, dtype):
+    din = cfg.d_inner
+    H, P, N, G, K = (
+        cfg.ssm_heads,
+        cfg.ssm_head_dim,
+        cfg.ssm_state,
+        cfg.ssm_groups,
+        cfg.ssm_conv,
+    )
+    return {
+        "conv_x": jnp.zeros((n_layers, batch, K - 1, din), dtype),
+        "conv_B": jnp.zeros((n_layers, batch, K - 1, G * N), dtype),
+        "conv_C": jnp.zeros((n_layers, batch, K - 1, G * N), dtype),
+        "state": jnp.zeros((n_layers, batch, H, P, N), jnp.float32),
+    }

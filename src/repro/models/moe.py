@@ -1,0 +1,172 @@
+"""Mixture-of-Experts FFN (GShard/Switch-style dense dispatch).
+
+Routing uses top-k gating with a fixed per-expert capacity and one-hot
+dispatch/combine einsums — fully static shapes, GSPMD-friendly: under
+expert-parallel sharding (experts on the model axis) the dispatch einsum
+lowers to an all-to-all, which is the collective the roofline analysis
+tracks for MoE archs.
+
+Two sharding regimes (DESIGN.md §4):
+* llama4-scout: E=16 == model axis → expert parallelism.
+* grok-1: E=8 ∤ 16 → tensor-parallel experts (shard each expert's d_ff).
+The regime is picked by ``sharding.param_specs`` from E % model.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, swiglu
+from .sharding import constrain
+
+
+def init_moe_params(key, cfg) -> dict:
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    s = max(cfg.moe_split_experts, 1)
+    # Virtual-expert splitting (§Perf): store each expert's FFN as ``s``
+    # d_ff/s-wide shards along the expert dim — mathematically identical
+    # (SwiGLU decomposes over d_ff chunks: y = Σ_j h_j @ w2_j), but the
+    # expert dim becomes E·s which can divide the model axis ⇒ expert
+    # parallelism (all-to-all) instead of tensor-parallel all-reduce.
+    Ev, Fv = E * s, F // s
+    ks = jax.random.split(key, 4)
+    scale = (1.0 / D) ** 0.5
+    return {
+        "router": dense_init(ks[0], D, E, jnp.float32),  # router kept in f32
+        "w1": (jax.random.normal(ks[1], (Ev, D, Fv)) * scale).astype(cfg.pdtype),
+        "w3": (jax.random.normal(ks[2], (Ev, D, Fv)) * scale).astype(cfg.pdtype),
+        "w2": (jax.random.normal(ks[3], (Ev, Fv, D)) * (1.0 / F) ** 0.5).astype(
+            cfg.pdtype
+        ),
+    }
+
+
+def _router(p: dict, xt: jax.Array, cfg):
+    """Shared routing: probs, top-k gates, Switch aux loss."""
+    E, K = cfg.n_experts, cfg.experts_per_token
+    gate_logits = xt.astype(jnp.float32) @ p["router"]  # [T, E]
+    probs = jax.nn.softmax(gate_logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)  # [T, K]
+    if K > 1:
+        gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)  # [T, K, E]
+    density = jnp.mean(jnp.sum(onehot, axis=1), axis=0)
+    aux = E * jnp.sum(density * jnp.mean(probs, axis=0))
+    return gate_vals, gate_idx, aux.astype(jnp.float32)
+
+
+def _expert_ffn(p: dict, xe: jax.Array, cfg) -> jax.Array:
+    """xe: [..., E, C, D] → [..., E, C, D] through per-expert SwiGLU."""
+    xe = constrain(xe, *([None] * (xe.ndim - 3)), "model", None, None)
+    h = swiglu(jnp.einsum("...ecd,edf->...ecf", xe, p["w1"]),
+               jnp.einsum("...ecd,edf->...ecf", xe, p["w3"]))
+    ye = jnp.einsum("...ecf,efd->...ecd", h, p["w2"])
+    return constrain(ye, *([None] * (ye.ndim - 3)), "model", None, None)
+
+
+def _moe_dense(p: dict, x: jax.Array, cfg) -> Tuple[jax.Array, jax.Array]:
+    """GShard-style dense one-hot dispatch (baseline).
+
+    ``cfg.moe_group_size`` splits tokens into groups and computes capacity
+    per group — the naive global-capacity variant (group_size=0) makes the
+    dispatch tensor O(T²·K/E) and is the §Perf baseline pathology.
+    """
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.experts_per_token
+    T = B * S
+    Sg = cfg.moe_group_size or T
+    G = max(T // Sg, 1)
+    Sg = T // G
+    xt = x.reshape(T, D)
+    gate_vals, gate_idx, aux = _router(p, xt, cfg)
+
+    capacity = max(int(cfg.capacity_factor * Sg * K / E), 1)
+    gi = gate_idx.reshape(G, Sg, K)
+    gv = gate_vals.reshape(G, Sg, K)
+    expert_onehot = jax.nn.one_hot(gi, E, dtype=jnp.int32)  # [G,Sg,K,E]
+    oh = expert_onehot.reshape(G, Sg * K, E)
+    pos = jnp.sum(jnp.cumsum(oh, axis=1) * oh - oh, axis=-1).reshape(G, Sg, K)
+    keep = pos < capacity
+
+    disp = (
+        jax.nn.one_hot(gi, E, dtype=x.dtype)[..., None]
+        * jax.nn.one_hot(
+            jnp.where(keep, pos, capacity), capacity + 1, dtype=x.dtype
+        )[..., None, :]
+    )[..., :capacity]  # [G,Sg,K,E,C]
+    disp_tok = disp.sum(axis=2)  # [G,Sg,E,C]
+    combine = jnp.sum(disp * gv[..., None, None].astype(x.dtype), axis=2)
+
+    xg = xt.reshape(G, Sg, D)
+    xe = jnp.einsum("gsd,gsec->gecd", xg, disp_tok)
+    ye = _expert_ffn(p, xe, cfg)
+    out = jnp.einsum("gecd,gsec->gsd", ye, combine)
+    return out.reshape(B, S, D), aux
+
+
+def _moe_gather(p: dict, x: jax.Array, cfg) -> Tuple[jax.Array, jax.Array]:
+    """Gather/scatter dispatch (§Perf beyond-baseline).
+
+    No dense [T,E,C] one-hot tensors: token→slot indices are computed with
+    integer ops per token-GROUP (capacity is a per-group quantity — computing
+    positions globally against a per-group capacity drops ~everything, the
+    bug found in §Perf iteration 2), the expert buffer is filled by scatter
+    (each slot receives at most one token) and results flow back by gather.
+    Dispatch FLOPs drop from O(T·E·C·D) to ~0; only the expert FFN matmuls
+    remain.
+    """
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.experts_per_token
+    T = B * S
+    Sg = cfg.moe_group_size or T
+    G = max(T // Sg, 1)
+    Sg = T // G
+    xt = x.reshape(T, D)
+    gate_vals, gate_idx, aux = _router(p, xt, cfg)
+
+    s = max(cfg.moe_split_experts, 1)
+    Ev = E * s
+    capacity = max(int(cfg.capacity_factor * Sg * K / E), 1)
+    gi = gate_idx.reshape(G, Sg * K)  # per-group flat assignments (real experts)
+    onehot = jax.nn.one_hot(gi, E, dtype=jnp.int32)  # [G, Sg·K, E]
+    pos = jnp.sum(jnp.cumsum(onehot, axis=1) * onehot - onehot, axis=-1)
+    keep = pos < capacity
+    # Each (token, expert) assignment lands in all ``s`` virtual shards of
+    # its expert: slot(g, ev=e·s+j, c) with a shared position c.
+    j = jnp.arange(s)
+    slot = jnp.where(
+        keep[..., None],
+        ((jnp.arange(G)[:, None] * Ev + gi * s)[..., None] + j) * capacity
+        + pos[..., None],
+        G * Ev * capacity,
+    ).reshape(-1)  # [G·SgK·s]
+    token_of = jnp.repeat(jnp.repeat(jnp.arange(T), K), s)
+
+    xe_flat = jnp.zeros((G * Ev * capacity + 1, D), x.dtype).at[slot].set(
+        xt[token_of], mode="drop"
+    )
+    ye = _expert_ffn(
+        p, xe_flat[:-1].reshape(G, Ev, capacity, D), cfg
+    )
+    ye_flat = jnp.concatenate(
+        [ye.reshape(G * Ev * capacity, D), jnp.zeros((1, D), x.dtype)], axis=0
+    )
+    # Gather back; the sum over K routes AND over the s virtual shards is one
+    # reshape-sum (y = Σ_j h_j @ w2_j decomposition of SwiGLU over d_ff).
+    w = (gate_vals.reshape(-1)[:, None].astype(x.dtype)
+         * keep.reshape(-1)[:, None])
+    back = ye_flat[slot] * jnp.repeat(w, s, axis=0)
+    out = back.reshape(T, K * s, D).sum(axis=1)
+    return out.reshape(B, S, D), aux
+
+
+def moe_forward(p: dict, x: jax.Array, cfg) -> Tuple[jax.Array, jax.Array]:
+    """x: [B, S, D] → (out [B, S, D], aux load-balance loss)."""
+    if cfg.moe_gather_dispatch:
+        return _moe_gather(p, x, cfg)
+    if cfg.moe_split_experts > 1:
+        raise ValueError("moe_split_experts requires moe_gather_dispatch")
+    return _moe_dense(p, x, cfg)

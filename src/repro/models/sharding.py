@@ -1,0 +1,224 @@
+"""GSPMD sharding rules for the model zoo.
+
+Layout (DESIGN.md §4/§5):
+
+* ``model`` axis — tensor parallel (attention heads / d_ff / vocab) or
+  expert parallel (MoE with n_experts % model == 0).
+* ``data``  axis — batch data-parallel + FSDP-style parameter sharding
+  (weights shard their d_model dim over ``data`` and are all-gathered by
+  GSPMD at use; optimizer state inherits the same sharding).
+* ``pod``   axis — additional data parallelism across pods (batch is sharded
+  over ``("pod", "data")``; parameters replicate across pods).
+
+Everything degrades gracefully: ``constrain`` drops mesh axes that do not
+exist (single-pod vs multi-pod, or no mesh at all in CPU smoke tests) and
+axes that do not divide the dimension (e.g. kv_heads=8 on model=16 — the KV
+cache then shards its *sequence* dim instead, flash-decoding style).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax._src import mesh as mesh_lib
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def active_mesh() -> Optional[jax.sharding.Mesh]:
+    m = mesh_lib.thread_resources.env.physical_mesh
+    return None if m.empty else m
+
+
+def _filter_entry(entry, dim: int, mesh) -> Optional[object]:
+    """Keep only mesh axes that exist and evenly divide ``dim``."""
+    if entry is None:
+        return None
+    names = entry if isinstance(entry, tuple) else (entry,)
+    kept = []
+    prod = 1
+    for n in names:
+        if n in mesh.axis_names:
+            size = mesh.shape[n]
+            if dim % (prod * size) == 0:
+                kept.append(n)
+                prod *= size
+    if not kept:
+        return None
+    return tuple(kept) if len(kept) > 1 else kept[0]
+
+
+def filtered_spec(shape: Sequence[int], entries: Sequence) -> Optional[P]:
+    """Build a PartitionSpec for ``shape``, dropping inapplicable axes."""
+    mesh = active_mesh()
+    if mesh is None:
+        return None
+    entries = tuple(entries) + (None,) * (len(shape) - len(entries))
+    return P(*(_filter_entry(e, d, mesh) for e, d in zip(entries, shape)))
+
+
+def constrain(x: jax.Array, *entries) -> jax.Array:
+    """``with_sharding_constraint`` that no-ops without a mesh and drops
+    non-applicable / non-dividing axes — safe in smoke tests and under any
+    mesh shape."""
+    spec = filtered_spec(x.shape, entries)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# --------------------------------------------------------------------------
+# Parameter sharding rules
+# --------------------------------------------------------------------------
+
+#: rules keyed by parameter leaf name → spec entries for the TRAILING dims
+#: (leading stacked-layer dims are padded with None).
+_RULES: Dict[str, Tuple] = {
+    # embeddings / head
+    "table": ("model", None),        # [V, D] vocab-sharded
+    "head_w": ("data", "model"),     # [D, V]
+    # attention (GQA)
+    "wq": ("data", "model"),
+    "wk": ("data", "model"),
+    "wv": ("data", "model"),
+    "bq": ("model",),
+    "bk": ("model",),
+    "bv": ("model",),
+    "wo": ("model", "data"),
+    # MLA
+    "wdq": ("data", None),
+    "wuq": (None, "model"),
+    "wdkv": ("data", None),
+    "wukv": (None, "model"),
+    "wo_mla": ("model", "data"),
+    # dense MLP (SwiGLU)
+    "w1": ("data", "model"),
+    "w3": ("data", "model"),
+    "w2": ("model", "data"),
+    # MoE (expert-parallel when E % model == 0, tensor-parallel otherwise)
+    "router": ("data", None),
+    "moe_w1_ep": ("model", "data", None),
+    "moe_w3_ep": ("model", "data", None),
+    "moe_w2_ep": ("model", None, "data"),
+    "moe_w1_tp": (None, "data", "model"),
+    "moe_w3_tp": (None, "data", "model"),
+    "moe_w2_tp": (None, "model", "data"),
+    # Mamba2
+    "wz": ("data", "model"),
+    "wx": ("data", "model"),
+    "wB": ("data", None),
+    "wC": ("data", None),
+    "wdt": ("data", "model"),
+    "conv_wx": (None, "model"),
+    "conv_bx": ("model",),
+    "conv_wB": (None, None),
+    "conv_bB": (None,),
+    "conv_wC": (None, None),
+    "conv_bC": (None,),
+    "A_log": ("model",),
+    "Dskip": ("model",),
+    "dt_bias": ("model",),
+    "gnorm": ("model",),
+    "out_proj": ("model", "data"),
+    # norms / misc
+    "scale": (None,),
+    "bias": (None,),
+    "proj_w": (None, None),  # VLM/audio frontend projector
+}
+
+
+def _strip_data(entries: Tuple) -> Tuple:
+    """Remove the "data" axis from spec entries (fsdp_params=False)."""
+    out = []
+    for e in entries:
+        if e == "data":
+            out.append(None)
+        elif isinstance(e, tuple):
+            kept = tuple(n for n in e if n != "data")
+            out.append(kept if kept else None)
+        else:
+            out.append(e)
+    return tuple(out)
+
+
+def _rule_for(path: Tuple[str, ...], cfg) -> Tuple:
+    leaf = path[-1]
+    entries = None
+    if cfg is not None and getattr(cfg, "n_experts", 0) and leaf in ("w1", "w2", "w3"):
+        if "moe" in path:
+            mesh = active_mesh()
+            model = mesh.shape.get("model", 1) if mesh is not None else 1
+            e_eff = cfg.n_experts * max(getattr(cfg, "moe_split_experts", 0), 1)
+            kind = "ep" if model > 1 and e_eff % model == 0 else "tp"
+            entries = _RULES[f"moe_{leaf}_{kind}"]
+    if entries is None and cfg is not None and getattr(cfg, "use_mla", False) and leaf == "wo":
+        entries = _RULES["wo_mla"]
+    if entries is None:
+        entries = _RULES.get(leaf, (None,))
+    if cfg is not None and not getattr(cfg, "fsdp_params", True):
+        entries = _strip_data(entries)
+    return entries
+
+
+def param_specs(params, cfg=None):
+    """PartitionSpec pytree for a parameter pytree (by leaf name)."""
+    mesh = active_mesh()
+
+    def spec(path, leaf):
+        names = tuple(
+            k.key if hasattr(k, "key") else str(k) for k in path
+        )
+        entries = _rule_for(names, cfg)
+        # pad leading stacked-layer dims with None
+        pad = leaf.ndim - len(entries)
+        entries = (None,) * max(pad, 0) + tuple(entries)[: leaf.ndim]
+        if mesh is None:
+            return P(*entries)
+        return filtered_spec(leaf.shape, entries)
+
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def param_shardings(params, cfg=None):
+    """NamedSharding pytree (for jit in_shardings) under the active mesh."""
+    mesh = active_mesh()
+    if mesh is None:
+        raise RuntimeError("param_shardings requires an active mesh context")
+    specs = param_specs(params, cfg)
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s if s is not None else P()),
+        specs,
+        is_leaf=lambda s: s is None or isinstance(s, P),
+    )
+
+
+# --------------------------------------------------------------------------
+# Batch / cache sharding decisions
+# --------------------------------------------------------------------------
+
+
+def batch_axes(global_batch: int) -> Tuple:
+    """Axes for the batch dim: pod×data when they divide, else fewer."""
+    return ("pod", "data")
+
+
+def kv_cache_entries(batch: int, kv_heads: int) -> Tuple:
+    """Spec entries for a KV cache laid out [B, S, KV, hd].
+
+    Prefer sharding KV heads on the model axis; when kv_heads doesn't divide
+    it (GQA kv=8 on model=16) shard the sequence dim instead — GSPMD then
+    lowers decode attention to partial-softmax + all-reduce (flash-decoding
+    style).  Batch=1 (long_500k) frees data for the sequence dim too.
+    """
+    mesh = active_mesh()
+    model = mesh.shape.get("model", 1) if mesh is not None else 1
+    heads_shardable = model > 1 and kv_heads % model == 0
+    b_entry = ("pod", "data")
+    data = mesh.shape.get("data", 1) if mesh is not None else 1
+    batch_uses_data = data > 1 and batch % data == 0
+    if heads_shardable:
+        seq_entry = None if batch_uses_data else ("data",)
+        return (b_entry, seq_entry, "model", None)
+    seq_entry = ("model",) if batch_uses_data else ("data", "model")
+    return (b_entry, seq_entry, None, None)

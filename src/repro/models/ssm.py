@@ -1,0 +1,119 @@
+"""Mamba2 language model assembly (mamba2-1.3b)."""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import cross_entropy, dense_init, embed_init, rmsnorm
+from .mamba2 import (
+    init_mamba2_cache,
+    init_mamba2_params,
+    mamba2_decode,
+    mamba2_forward,
+)
+from .sharding import constrain
+
+
+def _init_layer(key, cfg) -> dict:
+    return {
+        "ln": {"scale": jnp.ones((cfg.d_model,), cfg.pdtype)},
+        "mixer": init_mamba2_params(key, cfg),
+    }
+
+
+def init(key, cfg) -> dict:
+    ke, kh, kl = jax.random.split(key, 3)
+    V = cfg.padded_vocab
+    params = {
+        "embed": {"table": embed_init(ke, V, cfg.d_model, cfg.pdtype)},
+        "final_norm": {"scale": jnp.ones((cfg.d_model,), cfg.pdtype)},
+        "layers": jax.vmap(lambda k: _init_layer(k, cfg))(
+            jax.random.split(kl, cfg.n_layers)
+        ),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {"head_w": dense_init(kh, cfg.d_model, V, cfg.pdtype)}
+    return params
+
+
+def _logits(params, x, cfg):
+    x = rmsnorm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"]["table"].T
+    else:
+        logits = x @ params["lm_head"]["head_w"]
+    return constrain(logits, ("pod", "data"), None, "model")
+
+
+def _run_layers(params, x, cfg, collect: bool = False):
+    def body(carry, lp):
+        h, cache = mamba2_forward(
+            lp["mixer"], rmsnorm(carry, lp["ln"]["scale"], cfg.norm_eps), cfg,
+            return_state=collect,
+        )
+        y = carry + h
+        return constrain(y, ("pod", "data"), None, None), cache
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    return jax.lax.scan(body, x, params["layers"])
+
+
+def loss_fn(params, batch: dict, cfg) -> jax.Array:
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"]["table"], tokens, axis=0).astype(cfg.cdtype)
+    x, _ = _run_layers(params, x, cfg)
+    logits = _logits(params, x, cfg)
+    return cross_entropy(
+        logits[:, :-1], tokens[:, 1:], mask=batch.get("loss_mask"),
+        true_vocab=cfg.vocab_size,
+    )
+
+
+def init_cache(cfg, batch: int, cache_len: int = 0) -> dict:
+    cache = init_mamba2_cache(cfg, batch, cfg.n_layers, cfg.cdtype)
+    cache["pos"] = jnp.int32(0)
+    return cache
+
+
+def prefill(params, batch: dict, cfg, pad_to=None) -> Tuple[jax.Array, dict]:
+    del pad_to  # O(1) state — nothing to reserve
+    tokens = batch["tokens"]
+    S = tokens.shape[1]
+    x = jnp.take(params["embed"]["table"], tokens, axis=0).astype(cfg.cdtype)
+    x, caches = _run_layers(params, x, cfg, collect=True)
+    conv_x, conv_B, conv_C, state = caches
+    logits = _logits(params, x[:, -1:], cfg)[:, 0]
+    cache = {
+        "conv_x": conv_x, "conv_B": conv_B, "conv_C": conv_C,
+        "state": state, "pos": jnp.int32(S),
+    }
+    return logits, cache
+
+
+def decode_step(params, cache: dict, token: jax.Array, cfg, ring: bool = False):
+    del ring  # SSM decode is O(1) in sequence length — nothing to ring
+    x = jnp.take(params["embed"]["table"], token, axis=0).astype(cfg.cdtype)
+
+    def body(carry, scan_in):
+        lp, cx, cB, cC, st = scan_in
+        h, (cx, cB, cC, st) = mamba2_decode(
+            lp["mixer"], rmsnorm(carry, lp["ln"]["scale"], cfg.norm_eps),
+            cx, cB, cC, st, cfg,
+        )
+        return carry + h, (cx, cB, cC, st)
+
+    x, (cx, cB, cC, st) = jax.lax.scan(
+        body, x,
+        (params["layers"], cache["conv_x"], cache["conv_B"],
+         cache["conv_C"], cache["state"]),
+    )
+    logits = _logits(params, x, cfg)[:, 0]
+    new_cache = {
+        "conv_x": cx, "conv_B": cB, "conv_C": cC, "state": st,
+        "pos": cache["pos"] + 1,
+    }
+    return logits, new_cache

@@ -1,0 +1,343 @@
+"""Decoder-only transformer assembly: dense GQA / MLA / MoE / VLM backbones.
+
+Parameters are plain pytrees with per-layer leaves stacked on a leading dim
+and consumed by ``lax.scan`` (keeps HLO compact for 80-layer configs, which
+keeps 512-device GSPMD compiles tractable).  ``cfg.remat`` wraps the scanned
+block in ``jax.checkpoint``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from .layers import cross_entropy, dense_init, embed_init, rmsnorm
+from .moe import init_moe_params, moe_forward
+from .sharding import constrain
+
+
+# -- init -------------------------------------------------------------------
+
+
+def _init_layer(key, cfg) -> dict:
+    ka, km = jax.random.split(key)
+    layer = {
+        "ln1": {"scale": jnp.ones((cfg.d_model,), cfg.pdtype)},
+        "ln2": {"scale": jnp.ones((cfg.d_model,), cfg.pdtype)},
+    }
+    if cfg.use_mla:
+        layer["attn"] = attn.init_mla_params(ka, cfg)
+    else:
+        layer["attn"] = attn.init_gqa_params(ka, cfg)
+    if cfg.n_experts:
+        layer["moe"] = init_moe_params(km, cfg)
+    else:
+        k1, k2, k3 = jax.random.split(km, 3)
+        layer["mlp"] = {
+            "w1": dense_init(k1, cfg.d_model, cfg.d_ff, cfg.pdtype),
+            "w3": dense_init(k2, cfg.d_model, cfg.d_ff, cfg.pdtype),
+            "w2": dense_init(k3, cfg.d_ff, cfg.d_model, cfg.pdtype),
+        }
+    return layer
+
+
+def init(key, cfg) -> dict:
+    ke, kh, kl, kp = jax.random.split(key, 4)
+    V = cfg.padded_vocab
+    params = {
+        "embed": {"table": embed_init(ke, V, cfg.d_model, cfg.pdtype)},
+        "final_norm": {"scale": jnp.ones((cfg.d_model,), cfg.pdtype)},
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {"head_w": dense_init(kh, cfg.d_model, V, cfg.pdtype)}
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    params["layers"] = jax.vmap(lambda k: _init_layer(k, cfg))(layer_keys)
+    if cfg.frontend_tokens:
+        params["projector"] = {
+            "proj_w": dense_init(kp, cfg.frontend_dim, cfg.d_model, cfg.pdtype)
+        }
+    return params
+
+
+# -- blocks --------------------------------------------------------------------
+
+
+def _mlp(p: dict, x: jax.Array) -> jax.Array:
+    return (jax.nn.silu(x @ p["w1"]) * (x @ p["w3"])) @ p["w2"]
+
+
+def _train_window(cfg, seq_len: int) -> int:
+    w = cfg.sliding_window
+    return w if 0 < w < seq_len else 0
+
+
+def _block_forward(lp: dict, x: jax.Array, cfg, window: int, collect_kv: bool):
+    """One decoder layer.  Returns (x, aux, kv)."""
+    h_in = rmsnorm(x, lp["ln1"]["scale"], cfg.norm_eps)
+    if cfg.use_mla:
+        h, kv = attn.mla_forward(lp["attn"], h_in, cfg, return_kv=collect_kv)
+    else:
+        h, kv = attn.gqa_forward(
+            lp["attn"], h_in, cfg, window=window, return_kv=collect_kv
+        )
+    x = x + h
+    m_in = rmsnorm(x, lp["ln2"]["scale"], cfg.norm_eps)
+    if cfg.n_experts:
+        m, aux = moe_forward(lp["moe"], m_in, cfg)
+    else:
+        m, aux = _mlp(lp["mlp"], m_in), jnp.float32(0.0)
+    x = x + m
+    if cfg.seq_parallel:
+        # Sequence parallelism: block-boundary activations stay sharded on
+        # the model axis along S — GSPMD then lowers the TP output-projection
+        # all-reduces as reduce-scatter(+all-gather at next use): half the
+        # bytes, and norms run on 1/model of the tokens.
+        x = constrain(x, ("pod", "data"), "model", None)
+    else:
+        x = constrain(x, ("pod", "data"), None, None)
+    return x, aux, kv
+
+
+def _run_layers(params, x, cfg, window: int, collect_kv: bool = False):
+    """scan over stacked layers.  Returns (x, aux_sum, stacked kv | None)."""
+
+    def body(carry, lp):
+        y, aux, kv = _block_forward(lp, carry, cfg, window, collect_kv)
+        return y, (aux, kv) if collect_kv else (aux, None)
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+
+    if cfg.scan_layers:
+        x, (auxs, kvs) = jax.lax.scan(body, x, params["layers"])
+        aux = jnp.sum(auxs)
+    else:
+        aux = jnp.float32(0.0)
+        kv_list = []
+        L = jax.tree_util.tree_leaves(params["layers"])[0].shape[0]
+        for i in range(L):
+            lp = jax.tree.map(lambda t: t[i], params["layers"])
+            x, (a, kv) = body(x, lp)
+            aux = aux + a
+            kv_list.append(kv)
+        kvs = (
+            jax.tree.map(lambda *ts: jnp.stack(ts), *kv_list)
+            if collect_kv and kv_list
+            else None
+        )
+    return x, aux, kvs
+
+
+def _embed_inputs(params, batch: dict, cfg) -> jax.Array:
+    """Token embedding (+ projected frontend embeddings for VLM/audio)."""
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"]["table"], tokens, axis=0).astype(cfg.cdtype)
+    if cfg.frontend_tokens and "patches" in batch:
+        patches = batch["patches"].astype(cfg.cdtype) @ params["projector"]["proj_w"]
+        x = jnp.concatenate([patches, x], axis=1)
+    return x
+
+
+def _logits(params, x: jax.Array, cfg) -> jax.Array:
+    x = rmsnorm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"]["table"].T
+    else:
+        logits = x @ params["lm_head"]["head_w"]
+    return constrain(logits, ("pod", "data"), None, "model")
+
+
+# -- training loss ------------------------------------------------------------------
+
+
+def _chunked_ce(params, x, tokens, P: int, cfg) -> jax.Array:
+    """CE computed over sequence chunks — logits for only ``ce_chunk``
+    positions are ever live (caps the [B, S, V] f32 buffer)."""
+    T = tokens.shape[1] - 1
+    C = cfg.ce_chunk
+    n = T // C
+    xs = x[:, P : P + n * C].reshape(x.shape[0], n, C, -1).transpose(1, 0, 2, 3)
+    labels = tokens[:, 1 : 1 + n * C].reshape(-1, n, C).transpose(1, 0, 2)
+
+    def body(carry, inp):
+        xc, lc = inp
+        logits = _logits(params, xc, cfg)
+        lz = jax.scipy.special.logsumexp(
+            jnp.where(
+                jnp.arange(logits.shape[-1]) >= cfg.vocab_size, -1e9,
+                logits.astype(jnp.float32),
+            ),
+            axis=-1,
+        )
+        gold = jnp.take_along_axis(
+            logits.astype(jnp.float32), lc[..., None], axis=-1
+        )[..., 0]
+        return carry + jnp.sum(lz - gold), None
+
+    total, _ = jax.lax.scan(body, jnp.float32(0.0), (xs, labels))
+    tail = T - n * C
+    if tail:
+        logits = _logits(params, x[:, P + n * C : P + T], cfg)
+        total = total + jnp.sum(
+            jax.scipy.special.logsumexp(logits.astype(jnp.float32), axis=-1)
+            - jnp.take_along_axis(
+                logits.astype(jnp.float32),
+                tokens[:, 1 + n * C :][..., None], axis=-1,
+            )[..., 0]
+        )
+    return total / (tokens.shape[0] * T)
+
+
+def loss_fn(params, batch: dict, cfg) -> jax.Array:
+    """Next-token CE (+ MoE aux).  batch: tokens [B,S] (+ patches)."""
+    x = _embed_inputs(params, batch, cfg)
+    x = constrain(x, ("pod", "data"), None, None)
+    x, aux, _ = _run_layers(params, x, cfg, _train_window(cfg, x.shape[1]))
+    tokens = batch["tokens"]
+    P = x.shape[1] - tokens.shape[1]  # frontend prefix length
+    mask = batch.get("loss_mask")
+    if cfg.ce_chunk and mask is None:
+        ce = _chunked_ce(params, x, tokens, P, cfg)
+    else:
+        logits = _logits(params, x, cfg)
+        text_logits = logits[:, P : P + tokens.shape[1] - 1]
+        labels = tokens[:, 1:]
+        if mask is not None:
+            mask = mask[:, 1:]
+        ce = cross_entropy(
+            text_logits, labels, mask=mask, true_vocab=cfg.vocab_size
+        )
+    return ce + cfg.router_aux_weight * aux
+
+
+def logprobs_fn(params, batch: dict, cfg) -> jax.Array:
+    """Per-position log p(token) — used by GRPO (rl/grpo.py)."""
+    return policy_outputs(params, batch, cfg)[0]
+
+
+def policy_outputs(params, batch: dict, cfg):
+    """(log p(token) [B,T-1], entropy [B,T-1]) for policy-gradient losses."""
+    from .layers import log_softmax_gather
+
+    x = _embed_inputs(params, batch, cfg)
+    x, _, _ = _run_layers(params, x, cfg, _train_window(cfg, x.shape[1]))
+    logits = _logits(params, x, cfg)
+    tokens = batch["tokens"]
+    P = x.shape[1] - tokens.shape[1]
+    text_logits = logits[:, P : P + tokens.shape[1] - 1].astype(jnp.float32)
+    if cfg.vocab_size < text_logits.shape[-1]:
+        pad_mask = jnp.arange(text_logits.shape[-1]) >= cfg.vocab_size
+        text_logits = jnp.where(pad_mask, -1e9, text_logits)
+    logp_all = jax.nn.log_softmax(text_logits, axis=-1)
+    entropy = -jnp.sum(jnp.exp(logp_all) * jnp.where(
+        logp_all > -1e8, logp_all, 0.0), axis=-1)
+    logprobs = jnp.take_along_axis(
+        logp_all, batch["tokens"][:, 1:, None], axis=-1
+    )[..., 0]
+    return logprobs, entropy
+
+
+# -- serving --------------------------------------------------------------------------
+
+
+def init_cache(cfg, batch: int, cache_len: int) -> dict:
+    if cfg.use_mla:
+        ckv, kr = attn.init_mla_cache(cfg, batch, cache_len, cfg.n_layers, cfg.cdtype)
+        return {"ckv": ckv, "kr": kr, "pos": jnp.int32(0)}
+    k, v = attn.init_kv_cache(cfg, batch, cache_len, cfg.n_layers, cfg.cdtype)
+    return {"k": k, "v": v, "pos": jnp.int32(0)}
+
+
+def _pad_seq(t: jax.Array, pad_to: Optional[int]) -> jax.Array:
+    """Grow the cache's seq dim (axis 2 of [L,B,S,...]) to ``pad_to`` so
+    subsequent decode steps have slots to write into."""
+    if pad_to is None or t.shape[2] >= pad_to:
+        return t
+    pad = [(0, 0)] * t.ndim
+    pad[2] = (0, pad_to - t.shape[2])
+    return jnp.pad(t, pad)
+
+
+def prefill(params, batch: dict, cfg, pad_to: Optional[int] = None
+            ) -> Tuple[jax.Array, dict]:
+    """Forward over the prompt; returns (last-token logits [B,V], cache).
+
+    ``pad_to`` reserves cache slots for subsequent decode steps (a prompt-
+    length cache cannot grow — decode writes would clamp at the boundary).
+    """
+    x = _embed_inputs(params, batch, cfg)
+    S = x.shape[1]
+    x, _, kvs = _run_layers(
+        params, x, cfg, _train_window(cfg, S), collect_kv=True
+    )
+    logits = _logits(params, x[:, -1:], cfg)[:, 0]
+    if cfg.use_mla:
+        ckv, kr = kvs
+        cache = {"ckv": _pad_seq(ckv, pad_to), "kr": _pad_seq(kr, pad_to),
+                 "pos": jnp.int32(S)}
+    else:
+        k, v = kvs
+        cache = {"k": _pad_seq(k, pad_to), "v": _pad_seq(v, pad_to),
+                 "pos": jnp.int32(S)}
+    return logits, cache
+
+
+def decode_step(
+    params, cache: dict, token: jax.Array, cfg, ring: bool = False
+) -> Tuple[jax.Array, dict]:
+    """One decode step.  token: [B, 1] int32.  Returns (logits [B,V], cache)."""
+    pos = cache["pos"]
+    x = jnp.take(params["embed"]["table"], token, axis=0).astype(cfg.cdtype)
+
+    if cfg.use_mla:
+
+        def body(carry, scan_in):
+            lp, ckv_l, kr_l = scan_in
+            y = carry
+            h_in = rmsnorm(y, lp["ln1"]["scale"], cfg.norm_eps)
+            h, ckv_l, kr_l = attn.mla_decode(
+                lp["attn"], h_in, ckv_l, kr_l, pos, cfg, ring=ring
+            )
+            y = y + h
+            m_in = rmsnorm(y, lp["ln2"]["scale"], cfg.norm_eps)
+            if cfg.n_experts:
+                m, _ = moe_forward(lp["moe"], m_in, cfg)
+            else:
+                m = _mlp(lp["mlp"], m_in)
+            return y + m, (ckv_l, kr_l)
+
+        x, (ckv, kr) = jax.lax.scan(
+            body, x, (params["layers"], cache["ckv"], cache["kr"])
+        )
+        new_cache = {"ckv": ckv, "kr": kr, "pos": pos + 1}
+    else:
+
+        def body(carry, scan_in):
+            lp, k_l, v_l = scan_in
+            y = carry
+            h_in = rmsnorm(y, lp["ln1"]["scale"], cfg.norm_eps)
+            h, k_l, v_l = attn.gqa_decode(
+                lp["attn"], h_in, k_l, v_l, pos, cfg, ring=ring
+            )
+            y = y + h
+            m_in = rmsnorm(y, lp["ln2"]["scale"], cfg.norm_eps)
+            if cfg.n_experts:
+                m, _ = moe_forward(lp["moe"], m_in, cfg)
+            else:
+                m = _mlp(lp["mlp"], m_in)
+            return y + m, (k_l, v_l)
+
+        k = attn.constrain_kv_cache(cache["k"], cfg)
+        v = attn.constrain_kv_cache(cache["v"], cfg)
+        x, (k, v) = jax.lax.scan(body, x, (params["layers"], k, v))
+        new_cache = {
+            "k": attn.constrain_kv_cache(k, cfg),
+            "v": attn.constrain_kv_cache(v, cfg),
+            "pos": pos + 1,
+        }
+    logits = _logits(params, x, cfg)[:, 0]
+    return logits, new_cache

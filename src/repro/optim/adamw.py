@@ -1,0 +1,61 @@
+"""AdamW with global-norm clipping, pure-pytree implementation.
+
+First/second moments are kept in f32 regardless of parameter dtype (bf16
+params + f32 optimizer state is the standard TPU recipe); moments inherit the
+parameters' sharding, so under the FSDP layout (DESIGN.md §5) optimizer state
+is fully sharded across the mesh.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def adamw_init(params) -> dict:
+    zeros = lambda p: jax.tree.map(lambda t: jnp.zeros(t.shape, jnp.float32), p)
+    return {"m": zeros(params), "v": zeros(params), "step": jnp.int32(0)}
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(t.astype(jnp.float32))) for t in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(
+    grads, state: dict, params, config: AdamWConfig, lr_scale: jax.Array | float = 1.0
+) -> Tuple[object, dict]:
+    """One AdamW step.  Returns (new_params, new_state)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, config.clip_norm / (gnorm + 1e-9))
+    lr = config.lr * lr_scale
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m2 = config.b1 * m + (1 - config.b1) * g
+        v2 = config.b2 * v + (1 - config.b2) * g * g
+        mhat = m2 / (1 - config.b1 ** step.astype(jnp.float32))
+        vhat = v2 / (1 - config.b2 ** step.astype(jnp.float32))
+        delta = mhat / (jnp.sqrt(vhat) + config.eps)
+        delta = delta + config.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m2, v2
+
+    flat = jax.tree.map(upd, grads, state["m"], state["v"], params)
+    new_params = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], flat, is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, {"m": new_m, "v": new_v, "step": step}

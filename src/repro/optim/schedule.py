@@ -1,0 +1,15 @@
+"""Learning-rate schedules."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, warmup_steps: int, total_steps: int, floor: float = 0.1):
+    """Linear warmup → cosine decay to ``floor`` × peak.  Returns a scale."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = step / jnp.maximum(warmup_steps, 1)
+    progress = (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1)
+    progress = jnp.clip(progress, 0.0, 1.0)
+    cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * progress))
+    return jnp.where(step < warmup_steps, warm, cos)

@@ -1,0 +1,22 @@
+"""RL post-training substrate: GRPO, rollout engine, workload harness."""
+
+from .grpo import GRPOConfig, group_advantages, grpo_loss
+from .harness import RunReport, WorkloadRunner
+from .rollout import Rollout, RolloutEngine, pad_rollout_batch
+from .tokenizer import ToolVocab, terminal_action_vocab
+from .trainer import GRPOTrainer, TrainReport
+
+__all__ = [
+    "GRPOConfig",
+    "GRPOTrainer",
+    "Rollout",
+    "RolloutEngine",
+    "RunReport",
+    "ToolVocab",
+    "TrainReport",
+    "WorkloadRunner",
+    "grpo_loss",
+    "group_advantages",
+    "pad_rollout_batch",
+    "terminal_action_vocab",
+]

@@ -1,0 +1,68 @@
+"""GRPO (Group Relative Policy Optimization) — Shao et al. 2024, as used by
+the paper for terminal-bench and SkyRL-SQL post-training (App. C).
+
+Group-relative advantages: for G rollouts of one task with rewards r_i,
+A_i = (r_i − mean(r)) / (std(r) + ε), broadcast over the rollout's action
+tokens.  The loss is the PPO-clip surrogate against the behaviour policy's
+logprobs (one optimizer step per batch ⇒ ratios start at 1; the clip guards
+the multi-epoch case).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models.api import Family
+
+
+@dataclass(frozen=True)
+class GRPOConfig:
+    clip_eps: float = 0.2
+    kl_weight: float = 0.0  # optional KL-to-reference penalty
+    entropy_weight: float = 0.02  # exploration bonus (collapse guard)
+    adv_eps: float = 1e-4
+    group_size: int = 8
+
+
+def group_advantages(rewards: jnp.ndarray, cfg: GRPOConfig) -> jnp.ndarray:
+    """rewards: [n_groups, G] → advantages [n_groups, G]."""
+    mean = rewards.mean(axis=-1, keepdims=True)
+    std = rewards.std(axis=-1, keepdims=True)
+    return (rewards - mean) / (std + cfg.adv_eps)
+
+
+def grpo_loss(
+    params,
+    fam: Family,
+    model_cfg,
+    batch: dict,
+    cfg: GRPOConfig,
+    ref_logprobs: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """batch: tokens [B,T] int32, action_mask [B,T] f32 (1 at policy tokens),
+    advantages [B] f32, behavior_logprobs [B,T-1] f32 (stop-grad snapshot).
+    """
+    from ..models.transformer import policy_outputs
+
+    logprobs, entropy = policy_outputs(
+        params, {"tokens": batch["tokens"]}, model_cfg
+    )
+    # position t in logprobs predicts token t+1 → shift the mask
+    mask = batch["action_mask"][:, 1:]
+    adv = batch["advantages"][:, None]
+    ratio = jnp.exp(logprobs - batch["behavior_logprobs"])
+    unclipped = ratio * adv
+    clipped = jnp.clip(ratio, 1 - cfg.clip_eps, 1 + cfg.clip_eps) * adv
+    surrogate = jnp.minimum(unclipped, clipped)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = -(surrogate * mask).sum() / denom
+    if cfg.entropy_weight:
+        loss = loss - cfg.entropy_weight * (entropy * mask).sum() / denom
+    if cfg.kl_weight and ref_logprobs is not None:
+        kl = ((logprobs - ref_logprobs) * mask).sum() / denom
+        loss = loss + cfg.kl_weight * kl
+    return loss

@@ -1,0 +1,203 @@
+"""Post-training workload harness: epochs × tasks × parallel rollouts
+through TVCache, with the paper's timing instrumentation (§2.2, §4).
+
+This is the measurement engine behind the Fig. 2/5/7 and Table 2
+reproductions.  Rollout tool sequences come from scripted workload policies
+(data/tasks.py) or a real model policy (rl/rollout.py); tool execution goes
+through ``ToolCallExecutor`` exactly as a veRL/Tinker integration would.
+
+Timing: a shared ``VirtualClock`` charges simulated tool/generation
+latencies per rollout thread; cache lookups charge their real measured
+latency.  ``rollout_time = gen_time + tool_time``; batch time is the max
+over a task's parallel rollout group (Fig. 7b: "batch time is determined by
+the slowest rollout").
+"""
+
+from __future__ import annotations
+
+import random
+import statistics
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from ..core import (
+    CacheConfig,
+    CacheServer,
+    SandboxManager,
+    ToolCallExecutor,
+    VirtualClock,
+)
+from ..core.sandbox import ForkPipeline, ForkPipelineConfig
+from ..data.tasks import WorkloadSpec
+
+
+@dataclass
+class RolloutRecord:
+    task_id: str
+    epoch: int
+    rollout: int
+    gen_time: float
+    tool_time: float
+    calls: int
+    hits: int
+    per_call_times: List[float] = field(default_factory=list)
+
+    @property
+    def total_time(self) -> float:
+        return self.gen_time + self.tool_time
+
+    @property
+    def tool_fraction(self) -> float:
+        return self.tool_time / self.total_time if self.total_time else 0.0
+
+
+@dataclass
+class RunReport:
+    workload: str
+    use_cache: bool
+    rollouts: List[RolloutRecord]
+    epoch_hit_rates: List[float]
+    tool_hit_rates: Dict[str, float]
+    cache_summary: dict
+    sandbox_stats: dict
+    api_tokens: int = 0
+
+    # -- aggregates used by the benchmarks -------------------------------------
+
+    def median_per_call(self) -> float:
+        times = [t for r in self.rollouts for t in r.per_call_times]
+        return statistics.median(times) if times else 0.0
+
+    def mean_tool_fraction(self) -> float:
+        fr = [r.tool_fraction for r in self.rollouts]
+        return sum(fr) / len(fr) if fr else 0.0
+
+    def batch_times(self) -> List[float]:
+        """Max rollout time per (task, epoch) group — Fig. 7b."""
+        groups: Dict[tuple, float] = {}
+        for r in self.rollouts:
+            key = (r.task_id, r.epoch)
+            groups[key] = max(groups.get(key, 0.0), r.total_time)
+        return sorted(groups.values())
+
+    def rollout_times(self) -> List[float]:
+        return sorted(r.total_time for r in self.rollouts)
+
+
+class WorkloadRunner:
+    """Run a workload spec through TVCache (or cacheless baseline)."""
+
+    def __init__(
+        self,
+        spec: WorkloadSpec,
+        use_cache: bool = True,
+        miss_policy: str = "paper",
+        max_snapshots: int = 64,
+        seed: int = 0,
+        warm_roots: bool = True,
+        prefork: bool = True,
+    ):
+        self.spec = spec
+        self.use_cache = use_cache
+        self.seed = seed
+        self.warm_roots = warm_roots
+        self.clock = VirtualClock()
+        self.server = CacheServer(
+            CacheConfig(
+                skip_stateless=spec.skip_stateless,
+                miss_policy=miss_policy,
+                max_snapshots_per_task=max_snapshots,
+                enable_snapshots=spec.enable_snapshots,
+            )
+        )
+        self._pipeline = ForkPipeline(
+            ForkPipelineConfig(
+                precreate_networks=True,
+                selective_networks=True,
+                max_concurrent_forks=16,
+            ),
+            self.clock,
+        )
+        self._prefork = 1 if prefork else 0
+        self._managers: Dict[str, SandboxManager] = {}
+        self._executors: Dict[str, ToolCallExecutor] = {}
+
+    def _executor(self, task_id: str) -> ToolCallExecutor:
+        if task_id not in self._executors:
+            manager = SandboxManager(
+                env_factory=lambda: self.spec.env_factory(task_id, self.clock),
+                clock=self.clock,
+                pipeline=self._pipeline,
+                prefork_per_node=self._prefork,
+                background_workers=2,
+            )
+            self._managers[task_id] = manager
+            self._executors[task_id] = ToolCallExecutor(
+                self.server, manager,
+                annotate=self.spec.annotate,
+                enabled=self.use_cache,
+            )
+        return self._executors[task_id]
+
+    def run(self, n_tasks: Optional[int] = None,
+            n_epochs: Optional[int] = None) -> RunReport:
+        spec = self.spec
+        task_ids = spec.task_ids[: n_tasks or spec.n_tasks]
+        epochs = n_epochs or spec.n_epochs
+        records: List[RolloutRecord] = []
+        api_tokens = 0
+
+        for epoch in range(epochs):
+            self.server.stats.set_epoch(epoch)
+            for task_id in task_ids:
+                execu = self._executor(task_id)
+                if self.warm_roots and self.use_cache:
+                    # Proactive root warmup (§3.3): B·R roots per step.
+                    execu.manager.warm_roots(spec.rollouts_per_task)
+                policy = spec.policy_factory(task_id)
+                for r in range(spec.rollouts_per_task):
+                    rng = random.Random(
+                        hash((task_id, epoch, r, self.seed)) & 0xFFFFFFFF
+                    )
+                    calls = policy.sample(rng)
+                    self.clock.reset_thread()
+                    session = execu.session(task_id)
+                    per_call = []
+                    for call in calls:
+                        outcome = session.execute_detailed(call)
+                        per_call.append(outcome.tool_time)
+                    tool_time = self.clock.reset_thread()
+                    gen_tokens = rng.uniform(*spec.gen_tokens)
+                    gen_time = gen_tokens * spec.s_per_token
+                    env = session.sandbox
+                    if env is not None and hasattr(env, "api_tokens_spent"):
+                        api_tokens += env.api_tokens_spent
+                    session.close()
+                    records.append(
+                        RolloutRecord(
+                            task_id=task_id,
+                            epoch=epoch,
+                            rollout=r,
+                            gen_time=gen_time,
+                            tool_time=tool_time,
+                            calls=session.calls,
+                            hits=session.hits,
+                            per_call_times=per_call,
+                        )
+                    )
+
+        sandbox_stats = {}
+        for tid, mgr in self._managers.items():
+            mgr.drain()
+            for k, v in vars(mgr.stats).items():
+                sandbox_stats[k] = sandbox_stats.get(k, 0) + v
+        return RunReport(
+            workload=spec.name,
+            use_cache=self.use_cache,
+            rollouts=records,
+            epoch_hit_rates=self.server.stats.epoch_hit_rates(),
+            tool_hit_rates=self.server.stats.tool_hit_rates(),
+            cache_summary=self.server.stats_summary(),
+            sandbox_stats=sandbox_stats,
+            api_tokens=api_tokens,
+        )

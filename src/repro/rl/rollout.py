@@ -1,0 +1,160 @@
+"""Model-driven rollout engine with TVCache-backed tool execution (§2.1).
+
+Generates G parallel rollouts per task: batched incremental decoding
+(``decode_step`` with KV cache) interleaved with tool execution through
+``ToolCallExecutor`` — the exact integration point the paper describes for
+veRL/Tinker.  Tool latencies charge the shared virtual clock, so the
+GPU-idle-while-tool-runs coupling (Fig. 1) is measured, not imagined.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import ToolCallExecutor, VirtualClock
+from ..models.api import Family
+from .tokenizer import ToolVocab
+
+
+@dataclass
+class Rollout:
+    task_id: str
+    tokens: List[int]
+    action_mask: List[bool]  # True at positions the POLICY emitted
+    reward: float = 0.0
+    tool_time: float = 0.0
+    gen_time: float = 0.0
+    solved: bool = False
+    format_ok: bool = True
+
+
+class RolloutEngine:
+    """Batched sampling + tool execution for one task's rollout group."""
+
+    def __init__(
+        self,
+        fam: Family,
+        cfg,
+        vocab: ToolVocab,
+        executor_factory: Callable[[str], ToolCallExecutor],
+        clock: VirtualClock,
+        max_actions: int = 12,
+        temperature: float = 1.0,
+        s_per_token: float = 0.0,
+    ):
+        self.fam = fam
+        self.cfg = cfg
+        self.vocab = vocab
+        self.executor_factory = executor_factory
+        self.clock = clock
+        self.max_actions = max_actions
+        self.temperature = temperature
+        self.s_per_token = s_per_token
+        self._decode = jax.jit(
+            lambda p, c, t: fam.decode_step(p, c, t, cfg)
+        )
+        # reserve cache slots for the whole rollout: prompt + (action +
+        # feedback) per step + slack (a prompt-length cache cannot grow)
+        budget = 2 + 2 * max_actions + 2
+        self._prefill = jax.jit(
+            lambda p, b: fam.prefill(p, b, cfg, pad_to=budget)
+        )
+
+    def generate(
+        self,
+        params,
+        task_id: str,
+        task_index: int,
+        group_size: int,
+        rng: np.random.Generator,
+        reward_fn: Callable,
+    ) -> List[Rollout]:
+        """G rollouts for one task, batched along the group dimension."""
+        V = self.vocab
+        G = group_size
+        prompt = np.array(
+            [[V.BOS, V.task_token(task_index)]] * G, dtype=np.int32
+        )
+        logits, cache = self._prefill(params, {"tokens": jnp.asarray(prompt)})
+        rollouts = [
+            Rollout(task_id=task_id, tokens=list(prompt[i]),
+                    action_mask=[False, False])
+            for i in range(G)
+        ]
+        execu = self.executor_factory(task_id)
+        sessions = [execu.session(task_id) for _ in range(G)]
+        done = np.zeros(G, dtype=bool)
+
+        for step in range(self.max_actions):
+            # sample an action token per live rollout
+            logits_np = np.asarray(logits, dtype=np.float64)
+            # restrict to [STOP] ∪ actions; everything else is malformed
+            logits_np[:, : V.STOP] = -1e30
+            logits_np[:, V.OK : V.action_base] = -1e30
+            if self.temperature > 0:
+                z = logits_np[:, : V.size] / self.temperature
+                z -= z.max(axis=-1, keepdims=True)
+                p = np.exp(z)
+                p /= p.sum(axis=-1, keepdims=True)
+                toks = np.array(
+                    [rng.choice(V.size, p=p[i]) for i in range(G)], dtype=np.int32
+                )
+            else:
+                toks = logits_np[:, : V.size].argmax(axis=-1).astype(np.int32)
+
+            feedback = np.full(G, V.PAD, dtype=np.int32)
+            for i in range(G):
+                if done[i]:
+                    toks[i] = V.PAD
+                    continue
+                rollouts[i].tokens.append(int(toks[i]))
+                rollouts[i].action_mask.append(True)
+                if toks[i] == V.STOP:
+                    done[i] = True
+                    continue
+                call = V.decode_action(int(toks[i]))
+                if call is None:  # malformed tool call → reward −1 (App. C)
+                    rollouts[i].format_ok = False
+                    done[i] = True
+                    continue
+                self.clock.reset_thread()
+                result = sessions[i].execute(call)
+                rollouts[i].tool_time += self.clock.reset_thread()
+                feedback[i] = V.feedback_token(bool(result.ok))
+
+            if done.all():
+                break
+            # advance the model: action token, then feedback token
+            logits, cache = self._decode(params, cache, jnp.asarray(toks[:, None]))
+            for i in range(G):
+                if not done[i] and feedback[i] != V.PAD:
+                    rollouts[i].tokens.append(int(feedback[i]))
+                    rollouts[i].action_mask.append(False)
+            logits, cache = self._decode(
+                params, cache, jnp.asarray(feedback[:, None])
+            )
+
+        for i, r in enumerate(rollouts):
+            r.gen_time = self.s_per_token * len(r.tokens)
+            r.reward, r.solved = reward_fn(r, sessions[i])
+            sessions[i].close()
+        return rollouts
+
+
+def pad_rollout_batch(rollouts: List[Rollout], pad_to: int, pad_id: int):
+    """(tokens [G, T], action_mask [G, T]) numpy batch for the GRPO update."""
+    G = len(rollouts)
+    T = min(max(len(r.tokens) for r in rollouts), pad_to)
+    toks = np.full((G, T), pad_id, dtype=np.int32)
+    mask = np.zeros((G, T), dtype=np.float32)
+    for i, r in enumerate(rollouts):
+        t = min(len(r.tokens), T)
+        toks[i, :t] = r.tokens[:t]
+        mask[i, :t] = np.asarray(r.action_mask[:t], dtype=np.float32)
+    return toks, mask

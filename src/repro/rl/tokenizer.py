@@ -1,0 +1,78 @@
+"""Tool-call DSL tokenizer for the trainable agent.
+
+The CPU-trainable agent emits *action tokens*: each token is one complete
+tool call from a task-specific action inventory (the discrete analogue of
+emitting a serialized tool call, which is how the paper's agents interact —
+"tool calls are specially-formatted token sequences", §2.1).  After each
+action the environment injects a *feedback token* (OK/FAIL) so the policy
+can condition on observations.  Rollout layout:
+
+    [BOS] [TASK] a1 f1 a2 f2 … [STOP]
+
+Policy-gradient losses mask everything except the action/STOP positions.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence
+
+from ..core.tcg import ToolCall
+
+
+@dataclass
+class ToolVocab:
+    actions: List[ToolCall]
+    n_task_tokens: int = 16
+
+    # layout: [PAD, BOS, STOP, OK, FAIL, task_0..task_{T-1}, action_0..]
+    PAD: int = 0
+    BOS: int = 1
+    STOP: int = 2
+    OK: int = 3
+    FAIL: int = 4
+
+    @property
+    def task_base(self) -> int:
+        return 5
+
+    @property
+    def action_base(self) -> int:
+        return self.task_base + self.n_task_tokens
+
+    @property
+    def size(self) -> int:
+        return self.action_base + len(self.actions)
+
+    def task_token(self, task_index: int) -> int:
+        return self.task_base + (task_index % self.n_task_tokens)
+
+    def action_token(self, action_index: int) -> int:
+        return self.action_base + action_index
+
+    def is_action(self, token: int) -> bool:
+        return self.action_base <= token < self.size
+
+    def decode_action(self, token: int) -> Optional[ToolCall]:
+        if self.is_action(token):
+            return self.actions[token - self.action_base]
+        return None
+
+    def feedback_token(self, ok: bool) -> int:
+        return self.OK if ok else self.FAIL
+
+
+def terminal_action_vocab() -> ToolVocab:
+    """Action inventory for the terminal code-fix task family."""
+    cmds = [
+        "git_clone repo",
+        "pip_install pytest",
+        "ls",
+        "cat src/main.py",
+        "patch src/main.py BUG FIXED",
+        "patch src/main.py BUG PATCHED",
+        "compile",
+        "run_tests",
+        "echo done",
+    ]
+    return ToolVocab(actions=[ToolCall("bash", (c,)) for c in cmds])

@@ -1,0 +1,204 @@
+"""End-to-end GRPO post-training driver with TVCache (deliverable b).
+
+Post-trains a small transformer agent on the terminal code-fix task family:
+rollouts interleave batched incremental decoding with tool execution through
+``ToolCallExecutor`` (cache on or off), rewards follow the paper's −1/0/+1
+scheme (App. C), and the update is GRPO with AdamW.  This is the Fig. 6
+reward-parity experiment at CPU scale — and what examples/train_terminal_agent.py
+drives.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint import CheckpointManager
+from ..configs.qwen3_4b import toy_agent
+from ..core import (
+    CacheConfig,
+    CacheServer,
+    SandboxManager,
+    ToolCall,
+    ToolCallExecutor,
+    VirtualClock,
+)
+from ..core.sandbox import ForkPipeline, ForkPipelineConfig
+from ..envs import TerminalSandbox, make_terminal_task
+from ..models import get_family
+from ..optim import AdamWConfig, adamw_init, adamw_update, warmup_cosine
+from .grpo import GRPOConfig, group_advantages, grpo_loss
+from .rollout import RolloutEngine, pad_rollout_batch
+from .tokenizer import ToolVocab, terminal_action_vocab
+
+
+@dataclass
+class TrainReport:
+    rewards: List[float] = field(default_factory=list)  # mean reward per step
+    solve_rates: List[float] = field(default_factory=list)
+    losses: List[float] = field(default_factory=list)
+    tool_times: List[float] = field(default_factory=list)  # per step (virtual s)
+    hit_rates: List[float] = field(default_factory=list)
+    wall_time: float = 0.0
+
+
+class GRPOTrainer:
+    def __init__(
+        self,
+        n_tasks: int = 4,
+        group_size: int = 8,
+        use_cache: bool = True,
+        seed: int = 0,
+        model_cfg=None,
+        lr: float = 3e-4,
+        temperature: float = 1.0,
+        max_actions: int = 8,
+        checkpoint_dir: Optional[str] = None,
+    ):
+        self.vocab = terminal_action_vocab()
+        self.cfg = (model_cfg or toy_agent()).replace(
+            vocab_size=self.vocab.size
+        )
+        self.fam = get_family(self.cfg)
+        self.group_size = group_size
+        self.use_cache = use_cache
+        self.seed = seed
+        self.rng = np.random.default_rng(seed)
+        self.params = self.fam.init(jax.random.key(seed), self.cfg)
+        self.opt_cfg = AdamWConfig(lr=lr, weight_decay=0.0, clip_norm=1.0)
+        self.opt_state = adamw_init(self.params)
+        self.grpo_cfg = GRPOConfig(group_size=group_size)
+        self.clock = VirtualClock()
+        self.tasks = {
+            f"terminal-easy-{i:03d}": make_terminal_task(i) for i in range(n_tasks)
+        }
+        self.server = CacheServer(CacheConfig())
+        self._managers = {}
+        self.engine = RolloutEngine(
+            self.fam, self.cfg, self.vocab,
+            executor_factory=self._executor,
+            clock=self.clock,
+            max_actions=max_actions,
+            temperature=temperature,
+        )
+        self.ckpt = CheckpointManager(checkpoint_dir) if checkpoint_dir else None
+
+        self._update = jax.jit(self._update_fn)
+        self._logprobs = jax.jit(
+            lambda p, toks: self._behavior_logprobs(p, toks)
+        )
+
+    # ------------------------------------------------------------------
+
+    def _executor(self, task_id: str) -> ToolCallExecutor:
+        if task_id not in self._managers:
+            task = self.tasks[task_id]
+            manager = SandboxManager(
+                env_factory=lambda: TerminalSandbox(self.clock, task),
+                clock=self.clock,
+                pipeline=ForkPipeline(
+                    ForkPipelineConfig(
+                        precreate_networks=True, selective_networks=True
+                    ),
+                    self.clock,
+                ),
+                background_workers=2,
+            )
+            self._managers[task_id] = ToolCallExecutor(
+                self.server, manager, enabled=self.use_cache
+            )
+        return self._managers[task_id]
+
+    def _behavior_logprobs(self, params, tokens):
+        from ..models.transformer import logprobs_fn
+
+        return logprobs_fn(params, {"tokens": tokens}, self.cfg)
+
+    def _update_fn(self, params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: grpo_loss(p, self.fam, self.cfg, batch, self.grpo_cfg)
+        )(params)
+        lr_scale = warmup_cosine(opt_state["step"], 10, 500)
+        params, opt_state = adamw_update(
+            grads, opt_state, params, self.opt_cfg, lr_scale
+        )
+        return loss, params, opt_state
+
+    @staticmethod
+    def _reward(rollout, session) -> tuple:
+        """App. C scheme: −1 malformed, +1 tests pass, 0 otherwise."""
+        if not rollout.format_ok:
+            return -1.0, False
+        result = session.execute(ToolCall("bash", ("run_tests",)))
+        solved = bool(result.ok) and "passed" in str(result.output)
+        return (1.0 if solved else 0.0), solved
+
+    # ------------------------------------------------------------------
+
+    def train(self, steps: int = 30, log_every: int = 5,
+              log: Callable[[str], None] = print) -> TrainReport:
+        report = TrainReport()
+        task_ids = list(self.tasks)
+        t0 = time.monotonic()
+        for step in range(steps):
+            task_idx = step % len(task_ids)
+            task_id = task_ids[task_idx]
+            self.server.stats.set_epoch(step // len(task_ids))
+            self.clock.reset_thread()
+            rollouts = self.engine.generate(
+                self.params, task_id, task_idx, self.group_size,
+                self.rng, self._reward,
+            )
+            tool_time = sum(r.tool_time for r in rollouts)
+
+            toks, mask = pad_rollout_batch(
+                rollouts, pad_to=4 * self.engine.max_actions, pad_id=self.vocab.PAD
+            )
+            rewards = np.array([r.reward for r in rollouts], dtype=np.float32)
+            if rewards.std() > 1e-6:
+                # Zero-variance groups carry no GRPO signal — skipping them
+                # also keeps the entropy bonus from eroding a solved policy.
+                adv = np.asarray(
+                    group_advantages(jnp.asarray(rewards[None, :]), self.grpo_cfg)
+                )[0]
+                toks_j = jnp.asarray(toks)
+                behavior = jax.lax.stop_gradient(
+                    self._logprobs(self.params, toks_j)
+                )
+                batch = {
+                    "tokens": toks_j,
+                    "action_mask": jnp.asarray(mask),
+                    "advantages": jnp.asarray(adv),
+                    "behavior_logprobs": behavior,
+                }
+                loss, self.params, self.opt_state = self._update(
+                    self.params, self.opt_state, batch
+                )
+            else:
+                loss = jnp.float32(0.0)
+
+            report.rewards.append(float(rewards.mean()))
+            report.solve_rates.append(
+                float(np.mean([r.solved for r in rollouts]))
+            )
+            report.losses.append(float(loss))
+            report.tool_times.append(tool_time)
+            report.hit_rates.append(self.server.stats.hit_rate)
+            if log and step % log_every == 0:
+                log(
+                    f"[grpo] step={step:3d} task={task_id} "
+                    f"reward={rewards.mean():+.2f} "
+                    f"solve={report.solve_rates[-1]:.2f} loss={loss:.4f} "
+                    f"tool_time={tool_time:.1f}s hit={report.hit_rates[-1]:.2%}"
+                )
+            if self.ckpt and step % 20 == 19:
+                self.ckpt.save(step, {"params": self.params})
+        report.wall_time = time.monotonic() - t0
+        for execu in self._managers.values():
+            execu.manager.drain()
+        return report

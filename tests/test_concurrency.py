@@ -1,0 +1,166 @@
+"""Concurrency + persistence tests (paper §3.4: thread-safe API, refcounted
+eviction, periodic persistence for crash recovery, cross-iteration reuse)."""
+
+import threading
+
+import pytest
+
+from repro.core import (
+    CacheConfig,
+    CacheServer,
+    SandboxManager,
+    ToolCall,
+    ToolCallExecutor,
+    VirtualClock,
+)
+from repro.core.sandbox import ForkPipeline, ForkPipelineConfig
+from repro.envs import TerminalSandbox, make_terminal_task
+
+
+def make_stack(task, server=None):
+    clock = VirtualClock()
+    server = server or CacheServer(CacheConfig())
+    manager = SandboxManager(
+        env_factory=lambda: TerminalSandbox(clock, task),
+        clock=clock,
+        pipeline=ForkPipeline(
+            ForkPipelineConfig(precreate_networks=True, selective_networks=True),
+            clock,
+        ),
+        background_workers=4,
+    )
+    return ToolCallExecutor(server, manager), server, manager
+
+
+ROLLOUTS = [
+    ["git_clone repo", "pip_install pytest", "run_tests"],
+    ["git_clone repo", "cat src/main.py", "patch src/main.py BUG FIXED", "run_tests"],
+    ["git_clone repo", "pip_install pytest", "patch src/main.py BUG FIXED", "run_tests"],
+    ["git_clone repo", "ls", "compile"],
+]
+
+
+class TestConcurrentRollouts:
+    def test_parallel_rollouts_are_exact(self):
+        """16 threads × shared cache: every result must equal the cacheless
+        reference — races in the TCG/fork machinery would break this."""
+        task = make_terminal_task(5)
+        execu, server, manager = make_stack(task)
+
+        # cacheless references
+        refs = {}
+        for i, cmds in enumerate(ROLLOUTS):
+            env = TerminalSandbox(VirtualClock(), task)
+            env.start()
+            refs[i] = [env.execute(ToolCall("bash", (c,))).output for c in cmds]
+
+        errors = []
+
+        def worker(tid: int):
+            try:
+                for rep in range(3):
+                    idx = (tid + rep) % len(ROLLOUTS)
+                    sess = execu.session(task.task_id)
+                    outs = [
+                        sess.execute(ToolCall("bash", (c,))).output
+                        for c in ROLLOUTS[idx]
+                    ]
+                    sess.close()
+                    if outs != refs[idx]:
+                        errors.append((tid, idx, outs))
+            except Exception as e:  # pragma: no cover
+                errors.append((tid, "exception", repr(e)))
+
+        threads = [threading.Thread(target=worker, args=(t,)) for t in range(16)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        manager.drain()
+        assert not errors, errors[:3]
+        assert server.stats.hits > 0  # sharing actually happened
+
+    def test_concurrent_refcounts_never_negative(self):
+        task = make_terminal_task(6)
+        execu, server, manager = make_stack(task)
+        # seed a snapshot
+        sess = execu.session(task.task_id)
+        for c in ["git_clone repo", "compile"]:
+            sess.execute(ToolCall("bash", (c,)))
+        sess.close()
+
+        def worker():
+            for _ in range(5):
+                s = execu.session(task.task_id)
+                s.execute(ToolCall("bash", ("git_clone repo",)))
+                s.execute(ToolCall("bash", ("compile",)))
+                s.execute(ToolCall("bash", ("echo x",)))
+                s.close()
+
+        threads = [threading.Thread(target=worker) for _ in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        manager.drain()
+        for node in server.tcg(task.task_id).nodes():
+            assert node.refcount == 0
+
+
+class TestPersistence:
+    def test_crash_recovery_roundtrip(self, tmp_path):
+        """Server restart: persisted TCGs reload and keep serving hits —
+        'persists TCG snapshots periodically to disk to protect against GPU
+        server crashes' (§3.4) + cross-iteration reuse."""
+        task = make_terminal_task(7)
+        server1 = CacheServer(CacheConfig(persist_dir=str(tmp_path)))
+        execu, _, manager = make_stack(task, server=server1)
+        sess = execu.session(task.task_id)
+        outs1 = [
+            sess.execute(ToolCall("bash", (c,))).output
+            for c in ["git_clone repo", "compile", "run_tests"]
+        ]
+        sess.close()
+        manager.drain()
+        server1.persist()
+
+        # "crash", then a fresh server loads from disk
+        server2 = CacheServer(CacheConfig(persist_dir=str(tmp_path)))
+        assert server2.load() == 1
+        execu2, _, manager2 = make_stack(task, server=server2)
+        sess2 = execu2.session(task.task_id)
+        outs2 = [
+            sess2.execute(ToolCall("bash", (c,))).output
+            for c in ["git_clone repo", "compile", "run_tests"]
+        ]
+        sess2.close()
+        manager2.drain()
+        assert outs1 == outs2
+        assert sess2.hits == 3  # everything served from the reloaded TCG
+
+
+class TestAncestorPolicyBeyondPaper:
+    def test_ancestor_replays_no_more_than_paper(self):
+        """Beyond-paper miss policy: replay from the deepest snapshotted
+        ancestor must never replay more calls than the paper's
+        fresh-sandbox policy."""
+        task = make_terminal_task(8)
+        counts = {}
+        for policy in ("paper", "ancestor"):
+            clock = VirtualClock()
+            server = CacheServer(CacheConfig(miss_policy=policy))
+            manager = SandboxManager(
+                env_factory=lambda: TerminalSandbox(clock, task), clock=clock,
+                background_workers=1,
+            )
+            execu = ToolCallExecutor(server, manager)
+            # deep chain with a snapshot in the middle, then divergences
+            base = ["git_clone repo", "compile", "echo a", "echo b"]
+            for suffix in (["cat README.md"], ["ls"], ["run_tests"]):
+                sess = execu.session(task.task_id)
+                for c in base + suffix:
+                    sess.execute(ToolCall("bash", (c,)))
+                sess.close()
+            counts[policy] = server.stats.replayed_calls
+            manager.drain()
+        assert counts["ancestor"] <= counts["paper"]

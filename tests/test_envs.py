@@ -1,0 +1,180 @@
+"""Sandbox environment tests: determinism, statefulness, reward hooks."""
+
+import pytest
+
+from repro.core import ToolCall, VirtualClock
+from repro.envs import (
+    SQLSandbox,
+    TerminalSandbox,
+    VideoSandbox,
+    make_sql_task,
+    make_terminal_task,
+    make_video_task,
+)
+
+
+def bash(cmd):
+    return ToolCall("bash", (cmd,))
+
+
+class TestTerminalSandbox:
+    def make(self, i=0):
+        env = TerminalSandbox(VirtualClock(), make_terminal_task(i))
+        env.start()
+        return env
+
+    def test_determinism(self):
+        cmds = ["git_clone repo", "ls", "cat src/main.py", "run_tests"]
+        outs = []
+        for _ in range(2):
+            env = self.make()
+            outs.append([env.execute(bash(c)).output for c in cmds])
+        assert outs[0] == outs[1]
+
+    def test_state_mutation_changes_output(self):
+        env = self.make()
+        env.execute(bash("git_clone repo"))
+        before = env.execute(bash("cat src/main.py")).output
+        env.execute(bash("patch src/main.py BUG FIXED"))
+        after = env.execute(bash("cat src/main.py")).output
+        assert before != after and "FIXED" in after
+
+    def test_snapshot_restore_roundtrip(self):
+        env = self.make()
+        env.execute(bash("git_clone repo"))
+        env.execute(bash("pip_install pytest"))
+        blob = env.snapshot_bytes()
+        env.execute(bash("rm src/main.py"))
+        assert not env.execute(bash("cat src/main.py")).ok
+        env.restore_bytes(blob)
+        assert env.execute(bash("cat src/main.py")).ok
+
+    def test_fork_isolated(self):
+        env = self.make()
+        env.execute(bash("git_clone repo"))
+        child = env.fork()
+        child.execute(bash("rm README.md"))
+        assert env.execute(bash("cat README.md")).ok
+        assert not child.execute(bash("cat README.md")).ok
+
+    def test_solved_requires_full_sequence(self):
+        env = self.make()
+        assert not env.solved()
+        env.execute(bash("git_clone repo"))
+        env.execute(bash("pip_install pytest"))
+        assert not env.solved()
+        env.execute(bash("patch src/main.py BUG FIXED"))
+        assert env.solved()
+        assert "passed" in env.execute(bash("run_tests")).output
+
+    def test_latencies_heavy_tailed(self):
+        env = self.make()
+        t_clone = env.execute(bash("git_clone repo")).exec_time
+        t_ls = env.execute(bash("ls")).exec_time
+        assert t_clone > 5.0 and t_ls < 2.0
+
+    def test_medium_tasks_slower(self):
+        easy = TerminalSandbox(VirtualClock(), make_terminal_task(0, "easy"))
+        med = TerminalSandbox(VirtualClock(), make_terminal_task(0, "medium"))
+        easy.start(), med.start()
+        # latency_scale applies multiplicatively per task family
+        assert med.task.latency_scale > easy.task.latency_scale
+
+
+class TestSQLSandbox:
+    def make(self, i=0):
+        env = SQLSandbox(VirtualClock(), make_sql_task(i))
+        env.start()
+        return env
+
+    def test_real_queries(self):
+        env = self.make()
+        res = env.execute(ToolCall("sql", ("SELECT COUNT(*) FROM orders",)))
+        assert res.ok and res.output["rows"][0][0] == 200
+
+    def test_deterministic_across_instances(self):
+        q = "SELECT region, COUNT(*) FROM orders GROUP BY region ORDER BY region"
+        r1 = self.make().execute(ToolCall("sql", (q,))).output
+        r2 = self.make().execute(ToolCall("sql", (q,))).output
+        assert r1 == r2
+
+    def test_reads_stateless_writes_stateful(self):
+        env = self.make()
+        assert not env.will_mutate_state(ToolCall("sql", ("SELECT 1",)))
+        assert not env.will_mutate_state(ToolCall("sql", ("  with x as (select 1) select * from x",)))
+        assert env.will_mutate_state(ToolCall("sql", ("DELETE FROM orders",)))
+        assert env.will_mutate_state(ToolCall("sql", ("INSERT INTO orders VALUES (999,'x',1,'na')",)))
+
+    def test_error_query(self):
+        env = self.make()
+        res = env.execute(ToolCall("sql", ("SELECT * FROM nope",)))
+        assert not res.ok and "error" in res.output
+
+    def test_row_truncation(self):
+        env = self.make()
+        res = env.execute(ToolCall("sql", ("SELECT * FROM orders",)))
+        assert len(res.output["rows"]) == 50  # §G truncation
+
+    def test_reward_check(self):
+        env = self.make(0)
+        assert env.check_answer(env.task.answer_sql)
+        assert not env.check_answer("SELECT COUNT(*) FROM orders")
+
+    def test_network_rtt_dominates(self):
+        env = self.make()
+        res = env.execute(ToolCall("sql", ("SELECT 1",)))
+        assert res.exec_time >= env.network_rtt
+
+
+class TestVideoSandbox:
+    def make(self, i=0):
+        env = VideoSandbox(VirtualClock(), make_video_task(i))
+        env.start()
+        return env
+
+    def test_ordering_constraint(self):
+        env = self.make()
+        res = env.execute(ToolCall("caption_retrieval", (0, 5)))
+        assert not res.ok  # must load + preprocess first
+        env.execute(ToolCall("load_video", (env.task.video_name,)))
+        res = env.execute(ToolCall("caption_retrieval", (0, 5)))
+        assert not res.ok  # still needs preprocess
+        env.execute(ToolCall("preprocess", ()))
+        res = env.execute(ToolCall("caption_retrieval", (0, 5)))
+        assert res.ok and len(res.output["captions"]) == 5
+
+    def test_stateful_annotation(self):
+        env = self.make()
+        assert env.will_mutate_state(ToolCall("load_video", ("v",)))
+        assert env.will_mutate_state(ToolCall("preprocess", ()))
+        for t in ("object_memory_querying", "segment_localization",
+                  "caption_retrieval", "visual_question_answering"):
+            assert not env.will_mutate_state(ToolCall(t, ("x",)))
+
+    def test_output_depends_on_loaded_video(self):
+        """Appendix D: identical tool signatures on different videos must
+        produce different outputs — the trap for stateless caches."""
+        def captions(video):
+            env = self.make()
+            env.execute(ToolCall("load_video", (video,)))
+            env.execute(ToolCall("preprocess", ()))
+            return env.execute(ToolCall("caption_retrieval", (0, 3))).output
+
+        assert captions("video_a.mp4") != captions("video_b.mp4")
+
+    def test_api_token_accounting(self):
+        env = self.make()
+        env.execute(ToolCall("load_video", ("v",)))
+        env.execute(ToolCall("preprocess", ()))
+        assert env.api_tokens_spent == 0
+        env.execute(ToolCall("caption_retrieval", (0, 5)))
+        assert env.api_tokens_spent > 0
+
+    def test_snapshot_roundtrip(self):
+        env = self.make()
+        env.execute(ToolCall("load_video", ("v",)))
+        env.execute(ToolCall("preprocess", ()))
+        blob = env.snapshot_bytes()
+        env2 = VideoSandbox(VirtualClock(), env.task)
+        env2.restore_bytes(blob)
+        assert env2.execute(ToolCall("caption_retrieval", (0, 2))).ok

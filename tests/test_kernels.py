@@ -1,0 +1,216 @@
+"""Pallas kernel sweeps: shapes × dtypes vs the pure-jnp oracles (ref.py).
+
+All kernels run in interpret mode on this CPU host (the kernel bodies
+execute in Python); on a real TPU the same calls compile through Mosaic.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import flash_attention, moe_gmm, rmsnorm, ssd
+from repro.kernels import ref
+
+RNG = np.random.default_rng(42)
+
+
+def randn(shape, dtype):
+    return jnp.asarray(RNG.standard_normal(shape), dtype)
+
+
+def tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 else dict(
+        atol=2e-5, rtol=2e-5
+    )
+
+
+# --------------------------------------------------------------------------
+# flash attention
+# --------------------------------------------------------------------------
+
+ATTN_SHAPES = [
+    # (B, S, H, KV, hd, block_q, block_k)
+    (1, 128, 4, 4, 32, 64, 64),    # MHA
+    (2, 256, 4, 2, 64, 128, 64),   # GQA ratio 2
+    (1, 256, 8, 2, 32, 64, 128),   # GQA ratio 4, mixed blocks
+    (1, 64, 2, 1, 128, 64, 32),    # MQA, full head dim
+    (2, 512, 4, 4, 16, 128, 128),  # longer seq
+]
+
+
+@pytest.mark.parametrize("shape", ATTN_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_causal(shape, dtype):
+    B, S, H, KV, hd, bq, bk = shape
+    q, k, v = (randn((B, S, H, hd), dtype), randn((B, S, KV, hd), dtype),
+               randn((B, S, KV, hd), dtype))
+    out = flash_attention(q, k, v, block_q=bq, block_k=bk, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32), **tol(dtype)
+    )
+
+
+@pytest.mark.parametrize("window", [32, 64, 100])
+def test_flash_attention_sliding_window(window):
+    B, S, H, KV, hd = 1, 256, 4, 2, 32
+    q, k, v = (randn((B, S, H, hd), jnp.float32),
+               randn((B, S, KV, hd), jnp.float32),
+               randn((B, S, KV, hd), jnp.float32))
+    out = flash_attention(q, k, v, window=window, block_q=64, block_k=64,
+                          interpret=True)
+    want = ref.attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_non_causal():
+    B, S, H, KV, hd = 2, 128, 4, 4, 32
+    q, k, v = (randn((B, S, H, hd), jnp.float32),
+               randn((B, S, KV, hd), jnp.float32),
+               randn((B, S, KV, hd), jnp.float32))
+    out = flash_attention(q, k, v, causal=False, block_q=64, block_k=64,
+                          interpret=True)
+    want = ref.attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    s_blocks=st.integers(1, 4),
+    h=st.sampled_from([2, 4]),
+    ratio=st.sampled_from([1, 2]),
+    hd=st.sampled_from([16, 32]),
+)
+def test_flash_attention_property(s_blocks, h, ratio, hd):
+    S = 64 * s_blocks
+    kv = h // ratio
+    q, k, v = (randn((1, S, h, hd), jnp.float32),
+               randn((1, S, kv, hd), jnp.float32),
+               randn((1, S, kv, hd), jnp.float32))
+    out = flash_attention(q, k, v, block_q=64, block_k=64, interpret=True)
+    want = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=3e-5, rtol=3e-5)
+
+
+# --------------------------------------------------------------------------
+# mamba2 SSD
+# --------------------------------------------------------------------------
+
+SSD_SHAPES = [
+    # (B, S, H, P, N, chunk)
+    (1, 64, 2, 16, 8, 16),
+    (2, 128, 3, 16, 8, 32),
+    (1, 256, 4, 32, 16, 64),
+    (1, 128, 1, 64, 32, 128),  # single head, chunk == S
+]
+
+
+@pytest.mark.parametrize("shape", SSD_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_matches_sequential_recurrence(shape, dtype):
+    B, S, H, P, N, chunk = shape
+    x = randn((B, S, H, P), dtype)
+    dt = jnp.asarray(RNG.uniform(0.001, 0.1, (B, S, H)), jnp.float32)
+    A = -jnp.asarray(RNG.uniform(0.5, 4.0, (H,)), jnp.float32)
+    Bm, C = randn((B, S, H, N), dtype), randn((B, S, H, N), dtype)
+    y, state = ssd(x, dt, A, Bm, C, chunk=chunk, interpret=True)
+    yr, sr = ref.ssd_ref(x, dt, A, Bm, C)
+    np.testing.assert_allclose(
+        np.asarray(y, np.float32), np.asarray(yr, np.float32),
+        **tol(dtype)
+    )
+    np.testing.assert_allclose(np.asarray(state), np.asarray(sr),
+                               atol=1e-2 if dtype == jnp.bfloat16 else 1e-4,
+                               rtol=1e-2 if dtype == jnp.bfloat16 else 1e-4)
+
+
+def test_ssd_chunking_invariance():
+    """Different chunk sizes must give identical results."""
+    B, S, H, P, N = 1, 128, 2, 16, 8
+    x = randn((B, S, H, P), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.001, 0.1, (B, S, H)), jnp.float32)
+    A = -jnp.asarray(RNG.uniform(0.5, 4.0, (H,)), jnp.float32)
+    Bm, C = randn((B, S, H, N), jnp.float32), randn((B, S, H, N), jnp.float32)
+    outs = [
+        np.asarray(ssd(x, dt, A, Bm, C, chunk=c, interpret=True)[0])
+        for c in (16, 32, 128)
+    ]
+    np.testing.assert_allclose(outs[0], outs[1], atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(outs[0], outs[2], atol=1e-5, rtol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# rmsnorm
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", [(8, 64), (3, 7, 128), (2, 33, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm(shape, dtype):
+    x = randn(shape, dtype)
+    s = randn((shape[-1],), jnp.float32)
+    out = rmsnorm(x, s, interpret=True)
+    want = ref.rmsnorm_ref(x, s)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32), **tol(dtype)
+    )
+
+
+# --------------------------------------------------------------------------
+# moe gmm
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", [
+    (2, 64, 32, 48), (4, 128, 96, 80), (8, 256, 128, 128), (3, 65, 70, 33),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_moe_gmm(shape, dtype):
+    E, C, D, F = shape
+    x, w = randn((E, C, D), dtype), randn((E, D, F), dtype)
+    out = moe_gmm(x, w, interpret=True)
+    want = ref.moe_gmm_ref(x, w)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32),
+        atol=1e-1 if dtype == jnp.bfloat16 else 1e-4,
+        rtol=2e-2 if dtype == jnp.bfloat16 else 1e-4,
+    )
+
+
+# --------------------------------------------------------------------------
+# kernels vs the MODEL's jnp implementations (they must agree too)
+# --------------------------------------------------------------------------
+
+
+def test_flash_matches_model_attention():
+    from repro.models.attention import chunked_causal_attention
+
+    B, S, H, KV, hd = 1, 256, 4, 2, 32
+    q, k, v = (randn((B, S, H, hd), jnp.float32),
+               randn((B, S, KV, hd), jnp.float32),
+               randn((B, S, KV, hd), jnp.float32))
+    kern = flash_attention(q, k, v, block_q=64, block_k=64, interpret=True)
+    model = chunked_causal_attention(q, k, v, q_chunk=64)
+    np.testing.assert_allclose(np.asarray(kern), np.asarray(model),
+                               atol=3e-5, rtol=3e-5)
+
+
+def test_ssd_kernel_matches_model_ssd():
+    from repro.models.mamba2 import ssd_chunked
+
+    B, S, H, P, N = 1, 128, 2, 16, 8
+    x = randn((B, S, H, P), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.001, 0.1, (B, S, H)), jnp.float32)
+    A = -jnp.asarray(RNG.uniform(0.5, 4.0, (H,)), jnp.float32)
+    Bm, C = randn((B, S, H, N), jnp.float32), randn((B, S, H, N), jnp.float32)
+    yk, sk = ssd(x, dt, A, Bm, C, chunk=32, interpret=True)
+    ym, sm = ssd_chunked(x, dt, A, Bm, C, chunk=32)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(ym, np.float32),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(sk), np.asarray(sm),
+                               atol=1e-4, rtol=1e-4)

@@ -1,0 +1,150 @@
+"""Launch-layer tests: mesh construction, sharding specs, HLO analysis, and
+a small-mesh lower+compile (in a subprocess so the 8 fake devices don't leak
+into this process's jax state)."""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.launch.hlo_analysis import (
+    _shape_bytes,
+    model_flops_for,
+    parse_collectives,
+)
+from repro.launch.jaxpr_cost import count_fn
+from repro.configs import INPUT_SHAPES, get_config
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+class TestHLOAnalysis:
+    def test_shape_bytes(self):
+        assert _shape_bytes("bf16[2,3,4]") == 48
+        assert _shape_bytes("f32[10]") == 40
+        assert _shape_bytes("(f32[2], bf16[4])") == 16
+        assert _shape_bytes("pred[]") == 1
+
+    def test_parse_collectives_with_while_multiplier(self):
+        hlo = textwrap.dedent("""\
+        HloModule test
+
+        %body (p: (s32[], f32[8])) -> (s32[], f32[8]) {
+          %ar = f32[8]{0} all-reduce(%x), replica_groups=[2,4]<=[8], to_apply=%add
+        }
+
+        %cond (p: (s32[], f32[8])) -> pred[] {
+          %c = s32[] constant(10)
+        }
+
+        ENTRY %main (a: f32[8]) -> f32[8] {
+          %w = (s32[], f32[8]) while(%t), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"10"}}
+        }
+        """)
+        stats = parse_collectives(hlo)
+        # f32[8]=32B, n=4 → 2·32·3/4 = 48 per iteration × 10 trips
+        assert stats.bytes_by_kind["all-reduce"] == pytest.approx(480.0)
+
+    def test_model_flops(self):
+        cfg = get_config("qwen2-72b")
+        f = model_flops_for(cfg, INPUT_SHAPES["train_4k"])
+        # 6·N·D with N ≈ 72e9, D = 256·4096
+        assert 2e17 < f < 8e17
+
+    def test_moe_active_flops_smaller(self):
+        cfg = get_config("grok-1-314b")
+        full = 6 * cfg.param_count() * 10
+        active = 6 * cfg.param_count(active_only=True) * 10
+        assert active < 0.5 * full  # top-2 of 8 experts
+
+
+class TestJaxprCost:
+    def test_counts_scan_multiplier(self):
+        import jax
+        import jax.numpy as jnp
+
+        def f(x, ws):
+            def body(c, w):
+                return c @ w, None
+            y, _ = jax.lax.scan(body, x, ws)
+            return y.sum()
+
+        x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+        ws = jax.ShapeDtypeStruct((8, 64, 64), jnp.float32)
+        cost = count_fn(f, x, ws)
+        expected = 8 * 2 * 64 ** 3
+        assert cost.flops == pytest.approx(expected, rel=0.01)
+
+    def test_counts_remat_backward(self):
+        import jax
+        import jax.numpy as jnp
+
+        def loss(w, x):
+            @jax.checkpoint
+            def block(x):
+                return jnp.tanh(x @ w)
+            return block(block(x)).sum()
+
+        w = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+        x = jax.ShapeDtypeStruct((8, 32), jnp.float32)
+        fwd = count_fn(loss, w, x)
+        grad = count_fn(lambda w, x: jax.grad(loss)(w, x), w, x)
+        assert grad.flops > 2.5 * fwd.flops  # fwd + recompute + bwd
+
+
+@pytest.mark.slow
+class TestSmallMeshCompile:
+    def test_lower_compile_smoke_on_8_devices(self):
+        """A reduced config must lower+compile under a (2,4) mesh with the
+        production sharding rules — the dry-run machinery end to end."""
+        code = textwrap.dedent("""\
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import json
+        import jax
+        from repro.configs import get_smoke
+        from repro.configs.base import InputShape
+        from repro.launch.steps import lower_combo
+        from repro.launch.hlo_analysis import analyze_compiled
+
+        cfg = get_smoke("qwen2.5-3b").replace(param_dtype="bfloat16",
+                                              compute_dtype="bfloat16")
+        shape = InputShape("tiny_train", 64, 8, "train")
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        with mesh:
+            lowered, kind, cost = lower_combo(cfg, shape)
+            compiled = lowered.compile()
+            roof = analyze_compiled(cfg, shape, "2x4", kind, 8, compiled,
+                                    jaxpr_cost=cost)
+        print(json.dumps({
+            "kind": kind,
+            "flops": roof.hlo_flops,
+            "collective_bytes": roof.collective_bytes,
+            "bottleneck": roof.bottleneck,
+        }))
+        """)
+        env = dict(os.environ, PYTHONPATH=SRC)
+        out = subprocess.run(
+            [sys.executable, "-c", code], capture_output=True, text=True,
+            env=env, timeout=300,
+        )
+        assert out.returncode == 0, out.stderr[-2000:]
+        result = json.loads(out.stdout.strip().splitlines()[-1])
+        assert result["kind"] == "train_step"
+        assert result["flops"] > 0
+        assert result["collective_bytes"] > 0  # sharded ⇒ some collectives
+
+
+class TestMesh:
+    def test_production_mesh_is_a_function(self):
+        from repro.launch import mesh as mesh_mod
+        import inspect
+
+        assert inspect.isfunction(mesh_mod.make_production_mesh)
+        # module-level constants must not touch device state
+        src = inspect.getsource(mesh_mod)
+        assert "make_mesh(" in src

@@ -1,0 +1,89 @@
+"""MoE dispatch-variant equivalence tests (§Perf optimizations must not
+change the math — same spirit as the cache's exactness guarantee)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.models.moe import init_moe_params, moe_forward
+
+
+def make_cfg(**kw) -> ModelConfig:
+    base = dict(
+        name="moe-test", family="moe", n_layers=1, d_model=64, n_heads=4,
+        n_kv_heads=4, d_ff=96, vocab_size=128, n_experts=4,
+        experts_per_token=2, capacity_factor=8.0,  # generous: no drops
+        param_dtype="float32", compute_dtype="float32", remat=False,
+    )
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+@pytest.fixture()
+def x():
+    rng = np.random.default_rng(0)
+    return jnp.asarray(rng.standard_normal((2, 16, 64)), jnp.float32)
+
+
+def test_gather_matches_dense(x):
+    """With no capacity drops, gather and dense dispatch agree exactly."""
+    cfg_d = make_cfg()
+    p = init_moe_params(jax.random.key(0), cfg_d)
+    out_d, aux_d = moe_forward(p, x, cfg_d)
+    cfg_g = make_cfg(moe_gather_dispatch=True)
+    out_g, aux_g = moe_forward(p, x, cfg_g)
+    np.testing.assert_allclose(np.asarray(out_d), np.asarray(out_g),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(float(aux_d), float(aux_g), rtol=1e-6)
+
+
+def test_grouped_capacity_matches_global_when_no_drops(x):
+    cfg_glob = make_cfg(moe_gather_dispatch=True)
+    cfg_grp = make_cfg(moe_gather_dispatch=True, moe_group_size=16)
+    p = init_moe_params(jax.random.key(1), cfg_glob)
+    out1, _ = moe_forward(p, x, cfg_glob)
+    out2, _ = moe_forward(p, x, cfg_grp)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_virtual_expert_split_is_equivalent(x):
+    """Split params, reshaped back to the unsplit layout, give identical
+    outputs: y = Σ_j h_j @ w2_j decomposes SwiGLU over d_ff chunks."""
+    s = 2
+    cfg_split = make_cfg(moe_gather_dispatch=True, moe_split_experts=s)
+    p_split = init_moe_params(jax.random.key(2), cfg_split)
+    out_split, _ = moe_forward(p_split, x, cfg_split)
+
+    E, F = 4, 96
+    Fv = F // s
+
+    def unsplit_in(w):  # [E·s, D, Fv] → [E, D, F]
+        return w.reshape(E, s, -1, Fv).transpose(0, 2, 1, 3).reshape(E, -1, F)
+
+    def unsplit_out(w):  # [E·s, Fv, D] → [E, F, D]
+        return w.reshape(E, s, Fv, -1).reshape(E, F, -1)
+
+    p_unsplit = {
+        "router": p_split["router"],
+        "w1": unsplit_in(p_split["w1"]),
+        "w3": unsplit_in(p_split["w3"]),
+        "w2": unsplit_out(p_split["w2"]),
+    }
+    cfg_plain = make_cfg(moe_gather_dispatch=True)
+    out_plain, _ = moe_forward(p_unsplit, x, cfg_plain)
+    np.testing.assert_allclose(np.asarray(out_split), np.asarray(out_plain),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_capacity_drops_tokens_not_correctness():
+    """Tiny capacity drops overflow tokens (output ≈ partial) but never NaNs."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((1, 32, 64)), jnp.float32)
+    cfg = make_cfg(capacity_factor=0.25, moe_gather_dispatch=True)
+    p = init_moe_params(jax.random.key(3), cfg)
+    out, aux = moe_forward(p, x, cfg)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    assert bool(jnp.isfinite(aux))

@@ -1,0 +1,87 @@
+"""Policy-layer tests: snapshot cost model calibration, selective
+snapshotting decisions, eviction scoring, TCG entropy diagnostic."""
+
+import pytest
+
+from repro.core.policy import EvictionPolicy, SnapshotPolicy, expected_replay_cost, tcg_entropy
+from repro.core.serialize import CostSample, SnapshotCostModel, dumps, loads
+from repro.core.tcg import ToolCall, ToolCallGraph, ToolResult
+
+
+class TestSerialization:
+    def test_roundtrip(self):
+        obj = {"fs": {"a.py": "print(1)"}, "n": 3, "b": b"\x00\x01", "f": 1.5}
+        assert loads(dumps(obj)) == obj
+
+    def test_compression_effective(self):
+        obj = {"big": "x" * 100_000}
+        assert len(dumps(obj)) < 5_000
+
+
+class TestCostModel:
+    def test_estimate_scales_with_bytes(self):
+        m = SnapshotCostModel()
+        assert m.estimate(10**6) > m.estimate(10**3)
+
+    def test_calibration_moves_rate(self):
+        m = SnapshotCostModel(seconds_per_byte=1e-9, ema=0.5)
+        for _ in range(10):
+            m.observe(CostSample(nbytes=10**6, seconds=1.0))  # slow host
+        assert m.seconds_per_byte > 1e-7
+        assert m.n_samples == 10
+
+
+class TestSnapshotPolicy:
+    def test_expensive_tool_snapshotted_cheap_not(self):
+        p = SnapshotPolicy(cost_model=SnapshotCostModel())
+        assert p.should_snapshot(exec_time=30.0, est_snapshot_nbytes=10_000)
+        assert not p.should_snapshot(exec_time=0.001, est_snapshot_nbytes=10_000)
+
+    def test_huge_snapshot_needs_longer_tool(self):
+        p = SnapshotPolicy(cost_model=SnapshotCostModel(seconds_per_byte=1e-6))
+        # 1 GB snapshot → ~2000 s overhead: a 30 s tool isn't worth it
+        assert not p.should_snapshot(exec_time=30.0, est_snapshot_nbytes=10**9)
+
+
+def _chain(n, exec_time=10.0, snap_every=0):
+    g = ToolCallGraph("t")
+    node = g.root
+    nodes = []
+    for i in range(n):
+        snap = b"s" if snap_every and i % snap_every == 0 else None
+        node = g.insert(node, ToolCall(f"t{i}"), ToolResult(i, exec_time),
+                        snapshot=snap)
+        nodes.append(node)
+    return g, nodes
+
+
+class TestEviction:
+    def test_scores_favor_shallow_fanout(self):
+        g = ToolCallGraph("t")
+        shallow = g.insert(g.root, ToolCall("a"), ToolResult(1, 10.0), snapshot=b"s")
+        for i in range(4):
+            g.insert(shallow, ToolCall(f"c{i}"), ToolResult(i, 10.0))
+        deep = shallow
+        for i in range(6):
+            deep = g.insert(deep, ToolCall(f"d{i}"), ToolResult(i, 10.0))
+        g.attach_snapshot(deep, b"s2")
+        pol = EvictionPolicy(max_snapshots=1)
+        victims = pol.select_victims(g)
+        assert victims == [deep]  # the deep leaf goes first
+
+    def test_expected_replay_cost(self):
+        g, nodes = _chain(6, exec_time=5.0, snap_every=3)  # snaps at 0, 3
+        assert expected_replay_cost(nodes[5]) == pytest.approx(10.0)  # 4,5
+        assert expected_replay_cost(nodes[3]) == pytest.approx(0.0)
+
+
+class TestEntropy:
+    def test_linear_chain_zero_entropy(self):
+        g, _ = _chain(8)
+        assert tcg_entropy(g) == 0.0
+
+    def test_branching_increases_entropy(self):
+        g = ToolCallGraph("t")
+        for i in range(4):
+            g.insert(g.root, ToolCall(f"b{i}"), ToolResult(i, 1.0))
+        assert tcg_entropy(g) > 1.0

@@ -1,0 +1,193 @@
+"""Property-based tests (hypothesis) for TVCache's system invariants.
+
+1. **Exactness** (§4.4): for ANY interleaving of rollouts with ANY tool-call
+   sequences, every result returned through the cache is bitwise-identical to
+   cacheless execution.  This is the invariant Fig. 6 (reward parity) rests on.
+2. **Appendix B**: stateless-skip mode preserves exactness when annotations
+   are honest, for any interleaving of stateful/stateless calls.
+3. **LPM**: the matched prefix is maximal and is a real path in the graph.
+4. **Eviction safety**: refcounted snapshots are never evicted; the budget
+   holds afterwards.
+"""
+
+import hypothesis.strategies as st
+from hypothesis import HealthCheck, given, settings
+
+from repro.core import (
+    CacheConfig,
+    CacheServer,
+    SandboxManager,
+    ToolCall,
+    ToolCallExecutor,
+    ToolResult,
+    VirtualClock,
+)
+from repro.core.sandbox import ForkPipeline, ForkPipelineConfig
+from repro.core.tcg import ToolCallGraph
+from repro.envs import TerminalSandbox, VideoSandbox, make_terminal_task, make_video_task
+
+# --- strategies -------------------------------------------------------------
+
+_TERMINAL_CMDS = [
+    "git_clone repo",
+    "pip_install pytest",
+    "ls",
+    "cat src/main.py",
+    "cat README.md",
+    "patch src/main.py BUG FIXED",
+    "patch src/main.py FIXED BUG",
+    "write notes.txt hello",
+    "rm notes.txt",
+    "compile",
+    "run_tests",
+    "python script.py",
+    "echo done",
+]
+
+terminal_rollout = st.lists(st.sampled_from(_TERMINAL_CMDS), min_size=1, max_size=8)
+terminal_rollouts = st.lists(terminal_rollout, min_size=1, max_size=5)
+
+_VIDEO_CALLS = [
+    ("load_video", ("video_0000.mp4",)),
+    ("preprocess", ()),
+    ("object_memory_querying", ("how many people",)),
+    ("segment_localization", ("cooking",)),
+    ("caption_retrieval", (0, 10)),
+    ("caption_retrieval", (10, 20)),
+    ("visual_question_answering", ("what is happening", 5)),
+]
+
+video_rollout = st.lists(st.sampled_from(_VIDEO_CALLS), min_size=1, max_size=8)
+video_rollouts = st.lists(video_rollout, min_size=1, max_size=5)
+
+
+def _terminal_stack(miss_policy="paper", skip_stateless=False, env_cls=TerminalSandbox, task=None):
+    clock = VirtualClock()
+    server = CacheServer(CacheConfig(miss_policy=miss_policy, skip_stateless=skip_stateless))
+    manager = SandboxManager(
+        env_factory=lambda: env_cls(clock, task),
+        clock=clock,
+        pipeline=ForkPipeline(
+            ForkPipelineConfig(precreate_networks=True, selective_networks=True),
+            clock,
+        ),
+        background_workers=1,
+    )
+    return ToolCallExecutor(server, manager), server
+
+
+# --- 1. exactness over random terminal rollouts ------------------------------
+
+
+@settings(max_examples=40, deadline=None, suppress_health_check=[HealthCheck.too_slow])
+@given(rollouts=terminal_rollouts, miss_policy=st.sampled_from(["paper", "ancestor"]))
+def test_cache_is_exact_terminal(rollouts, miss_policy):
+    task = make_terminal_task(1)
+    execu, _ = _terminal_stack(miss_policy=miss_policy, task=task)
+
+    def reference(cmds):
+        env = TerminalSandbox(VirtualClock(), task)
+        env.start()
+        return [env.execute(ToolCall("bash", (c,))).output for c in cmds]
+
+    for cmds in rollouts:
+        sess = execu.session(task.task_id)
+        got = [sess.execute(ToolCall("bash", (c,))).output for c in cmds]
+        sess.close()
+        assert got == reference(cmds)
+
+
+# --- 2. Appendix-B stateless skipping preserves exactness --------------------
+
+
+@settings(max_examples=40, deadline=None, suppress_health_check=[HealthCheck.too_slow])
+@given(rollouts=video_rollouts)
+def test_stateless_skip_is_exact_video(rollouts):
+    task = make_video_task(0)
+    clock = VirtualClock()
+    server = CacheServer(CacheConfig(skip_stateless=True))
+    probe = VideoSandbox(clock, task)
+    manager = SandboxManager(
+        env_factory=lambda: VideoSandbox(clock, task), clock=clock,
+        background_workers=1,
+    )
+    execu = ToolCallExecutor(
+        server, manager,
+        annotate=lambda c: probe.will_mutate_state(c),
+    )
+
+    def reference(calls):
+        env = VideoSandbox(VirtualClock(), task)
+        env.start()
+        return [env.execute(ToolCall(n, a)).output for n, a in calls]
+
+    for calls in rollouts:
+        sess = execu.session(task.task_id)
+        got = [sess.execute(ToolCall(n, a)).output for n, a in calls]
+        sess.close()
+        assert got == reference(calls)
+
+
+# --- 3. LPM maximality ---------------------------------------------------------
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    paths=st.lists(
+        st.lists(st.sampled_from("abcd"), min_size=1, max_size=6),
+        min_size=1,
+        max_size=6,
+    ),
+    query=st.lists(st.sampled_from("abcd"), min_size=1, max_size=8),
+)
+def test_lpm_is_maximal(paths, query):
+    g = ToolCallGraph("t")
+    for path in paths:
+        node = g.root
+        for name in path:
+            node = g.insert(node, ToolCall(name), ToolResult(name, 1.0))
+    q = [ToolCall(name) for name in query]
+    lpm = g.lpm(q)
+    # (a) the matched prefix is a real path:
+    assert lpm.node.path() == [c.descriptor for c in q[: lpm.matched_calls]]
+    # (b) maximality: the next query call is absent from the node's children.
+    if lpm.matched_calls < len(q):
+        assert q[lpm.matched_calls].descriptor not in lpm.node.children
+    else:
+        assert lpm.is_exact
+
+
+# --- 4. eviction safety ----------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n_nodes=st.integers(min_value=1, max_value=30),
+    budget=st.integers(min_value=1, max_value=8),
+    pinned=st.sets(st.integers(min_value=0, max_value=29), max_size=5),
+)
+def test_eviction_respects_refcounts_and_budget(n_nodes, budget, pinned):
+    from repro.core.policy import EvictionPolicy
+
+    g = ToolCallGraph("t")
+    node = g.root
+    nodes = []
+    for i in range(n_nodes):
+        node = g.insert(
+            node, ToolCall(f"t{i}"), ToolResult(i, float(i % 7)),
+            snapshot=f"snap{i}".encode(),
+        )
+        nodes.append(node)
+    for i in pinned:
+        if i < len(nodes):
+            g.incref(nodes[i])
+    policy = EvictionPolicy(max_snapshots=budget)
+    policy.enforce(g)
+    survivors = g.snapshot_nodes()
+    # pinned nodes survive
+    for i in pinned:
+        if i < len(nodes):
+            assert nodes[i].has_snapshot
+    # budget holds unless pinned nodes alone exceed it
+    n_pinned = sum(1 for i in pinned if i < len(nodes))
+    assert len(survivors) <= max(budget, n_pinned)

@@ -1,0 +1,103 @@
+"""HTTP server/client + sharded deployment tests (paper Fig. 4, §4.5)."""
+
+import pytest
+
+from repro.core import (
+    CacheConfig,
+    SandboxManager,
+    ToolCall,
+    ToolCallExecutor,
+    ToolResult,
+    TVCacheHTTPServer,
+    VirtualClock,
+)
+from repro.core.server import HTTPCacheClient
+from repro.core.sharding import ShardedHTTPDeployment, make_inprocess_shards
+from repro.envs import TerminalSandbox, make_terminal_task
+
+
+@pytest.fixture()
+def http_server():
+    server = TVCacheHTTPServer(CacheConfig()).start()
+    yield server
+    server.stop()
+
+
+def tc(name, *args, mutates=None):
+    return ToolCall(name, tuple(args), mutates)
+
+
+class TestHTTPEndpoints:
+    def test_put_get_roundtrip(self, http_server):
+        client = HTTPCacheClient(http_server.address)
+        resp = client.put("t1", [], tc("bash", "ls"), ToolResult("files", 1.2))
+        assert resp.node_id > 0
+        res = client.get("t1", [], tc("bash", "ls"))
+        assert res is not None and res.output == "files"
+        assert client.get("t1", [], tc("bash", "pwd")) is None
+
+    def test_prefix_match_and_snapshot(self, http_server):
+        client = HTTPCacheClient(http_server.address)
+        resp = client.put("t1", [], tc("a"), ToolResult("r", 30.0),
+                          est_snapshot_nbytes=100)
+        assert resp.snapshot_wanted  # 30 s exec ≫ snapshot overhead
+        client.attach_snapshot("t1", resp.node_id, b"snapshot-blob")
+        pm = client.prefix_match("t1", [tc("a"), tc("b")])
+        assert pm.matched == 1 and not pm.exact
+        assert pm.snapshot == b"snapshot-blob"
+        assert pm.ref_taken
+        client.decref("t1", pm.snapshot_node_id)
+
+    def test_stats_and_visualize(self, http_server):
+        client = HTTPCacheClient(http_server.address)
+        client.put("t1", [], tc("a"), ToolResult("r", 1.0))
+        client.get("t1", [], tc("a"))
+        stats = client.stats_summary()
+        assert stats["lookups"] == 1 and stats["hits"] == 1
+        assert "digraph TCG" in client.visualize("t1")
+
+    def test_executor_over_http(self, http_server):
+        """End-to-end: the executor is transport-agnostic."""
+        task = make_terminal_task(3)
+        clock = VirtualClock()
+        client = HTTPCacheClient(http_server.address)
+        manager = SandboxManager(
+            env_factory=lambda: TerminalSandbox(clock, task), clock=clock,
+        )
+        execu = ToolCallExecutor(client, manager)
+        cmds = ["git_clone repo", "run_tests"]
+        s1 = execu.session(task.task_id)
+        out1 = [s1.execute(ToolCall("bash", (c,))) for c in cmds]
+        s2 = execu.session(task.task_id)
+        out2 = [s2.execute(ToolCall("bash", (c,))) for c in cmds]
+        assert [o.output for o in out1] == [o.output for o in out2]
+        assert s2.hits == len(cmds)
+        manager.drain()
+
+
+class TestSharding:
+    def test_inprocess_sharding_routes_consistently(self):
+        sharded = make_inprocess_shards(4)
+        for i in range(20):
+            tid = f"task-{i}"
+            sharded.put(tid, [], tc("a"), ToolResult(i, 1.0))
+        for i in range(20):
+            res = sharded.get(f"task-{i}", [], tc("a"))
+            assert res is not None and res.output == i
+        # Tasks are spread across shards.
+        occupied = sum(
+            1 for s in sharded.shards if s.stats_summary()["tasks"] > 0
+        )
+        assert occupied >= 2
+        merged = sharded.stats_summary()
+        assert merged["lookups"] == 20 and merged["hit_rate"] == 1.0
+
+    def test_http_sharded_deployment(self):
+        dep = ShardedHTTPDeployment(2)
+        try:
+            for i in range(8):
+                dep.client.put(f"t{i}", [], tc("x"), ToolResult(i, 1.0))
+            for i in range(8):
+                assert dep.client.get(f"t{i}", [], tc("x")).output == i
+        finally:
+            dep.stop()

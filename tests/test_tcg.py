@@ -1,0 +1,171 @@
+"""Unit tests for the Tool Call Graph (paper §3.1–§3.2)."""
+
+import pytest
+
+from repro.core.tcg import LPMResult, ToolCall, ToolCallGraph, ToolResult
+
+
+def tc(name, *args, mutates=None):
+    return ToolCall(name, tuple(args), mutates)
+
+
+def tr(output, t=1.0):
+    return ToolResult(output=output, exec_time=t)
+
+
+class TestTrieBasics:
+    def test_empty_graph_misses(self):
+        g = ToolCallGraph("t")
+        assert g.lookup([], tc("bash", "ls")) is None
+        lpm = g.lpm([tc("bash", "ls")])
+        assert lpm.matched_calls == 0 and not lpm.is_exact
+
+    def test_insert_then_exact_hit(self):
+        g = ToolCallGraph("t")
+        n1 = g.insert(g.root, tc("bash", "ls"), tr("files"))
+        assert g.lookup([], tc("bash", "ls")).output == "files"
+        g.insert(n1, tc("bash", "cat a"), tr("contents"))
+        assert g.lookup([tc("bash", "ls")], tc("bash", "cat a")).output == "contents"
+
+    def test_statefulness_cat_patch_cat(self):
+        """The paper's §1 example: cat → patch → cat must NOT alias."""
+        g = ToolCallGraph("t")
+        n1 = g.insert(g.root, tc("bash", "cat foo.py"), tr("old"))
+        n2 = g.insert(n1, tc("bash", "patch foo.py"), tr("patched"))
+        g.insert(n2, tc("bash", "cat foo.py"), tr("new"))
+        # Same descriptor, different history → different results.
+        assert g.lookup([], tc("bash", "cat foo.py")).output == "old"
+        hist = [tc("bash", "cat foo.py"), tc("bash", "patch foo.py")]
+        assert g.lookup(hist, tc("bash", "cat foo.py")).output == "new"
+
+    def test_history_divergence_misses(self):
+        g = ToolCallGraph("t")
+        n1 = g.insert(g.root, tc("a"), tr(1))
+        g.insert(n1, tc("b"), tr(2))
+        # History [a'] not in graph → lookup of b under it must miss.
+        assert g.lookup([tc("a-prime")], tc("b")) is None
+
+    def test_lpm_partial(self):
+        g = ToolCallGraph("t")
+        n1 = g.insert(g.root, tc("a"), tr(1))
+        n2 = g.insert(n1, tc("b"), tr(2))
+        lpm = g.lpm([tc("a"), tc("b"), tc("c"), tc("d")])
+        assert lpm.node is n2
+        assert lpm.matched_calls == 2
+        assert not lpm.is_exact
+
+    def test_lpm_exact(self):
+        g = ToolCallGraph("t")
+        n1 = g.insert(g.root, tc("a"), tr(1))
+        lpm = g.lpm([tc("a")])
+        assert lpm.is_exact and lpm.node is n1
+
+    def test_branching(self):
+        """Fig. 3: multiple rollouts share prefixes and branch."""
+        g = ToolCallGraph("t")
+        n1 = g.insert(g.root, tc("t1"), tr("r1"))
+        n2 = g.insert(n1, tc("t2"), tr("r2"))
+        g.insert(n2, tc("t3"), tr("r3"))
+        g.insert(n2, tc("t4"), tr("r4"))  # branch
+        g.insert(n1, tc("t5"), tr("r5"))  # earlier branch
+        assert len(n2.children) == 2
+        assert len(n1.children) == 2
+        assert len(g) == 6  # root + 5
+
+    def test_idempotent_insert(self):
+        g = ToolCallGraph("t")
+        g.insert(g.root, tc("a"), tr(1))
+        g.insert(g.root, tc("a"), tr(1))
+        assert len(g) == 2
+
+
+class TestSnapshots:
+    def test_snapshot_attach_and_deepest(self):
+        g = ToolCallGraph("t")
+        n1 = g.insert(g.root, tc("a"), tr(1))
+        n2 = g.insert(n1, tc("b"), tr(2), snapshot=b"snap-b")
+        n3 = g.insert(n2, tc("c"), tr(3))
+        assert g.deepest_snapshot(n3) is n2
+        assert g.deepest_snapshot(n1) is None
+        g.attach_snapshot(n1, b"snap-a")
+        assert g.deepest_snapshot(n1) is n1
+
+    def test_refcounting(self):
+        g = ToolCallGraph("t")
+        n1 = g.insert(g.root, tc("a"), tr(1), snapshot=b"s")
+        g.incref(n1)
+        g.incref(n1)
+        assert n1.refcount == 2
+        g.decref(n1)
+        g.decref(n1)
+        with pytest.raises(RuntimeError):
+            g.decref(n1)
+
+
+class TestStatelessSkipping:
+    """Appendix B semantics."""
+
+    def test_stateless_results_side_table(self):
+        g = ToolCallGraph("t", skip_stateless=True)
+        n1 = g.insert(g.root, tc("load", mutates=True), tr("ok"))
+        g.insert(n1, tc("caption", 0, 10, mutates=False), tr("caps"))
+        # Lookup with reordered/absent stateless calls still hits.
+        hist = [tc("load", mutates=True)]
+        assert g.lookup(hist, tc("caption", 0, 10, mutates=False)).output == "caps"
+        # Stateless call does NOT create a node.
+        assert len(g) == 2
+
+    def test_reordering_hits(self):
+        """Fig. 10 / App D Example 2: different orderings of stateless tools
+        still hit each other's cache entries."""
+        g = ToolCallGraph("t", skip_stateless=True)
+        load, pre = tc("load", mutates=True), tc("pre", mutates=True)
+        cap = tc("caption", 0, 10, mutates=False)
+        vqa = tc("vqa", "q", 5, mutates=False)
+        n1 = g.insert(g.root, load, tr("l"))
+        n2 = g.insert(n1, pre, tr("p"))
+        # Rollout 1 executes cap then vqa.
+        g.insert(n2, cap, tr("caps"))
+        g.insert(n2, vqa, tr("ans"))
+        # Rollout 2 queries vqa FIRST (different order) — still a hit.
+        assert g.lookup([load, pre], vqa).output == "ans"
+        assert g.lookup([load, pre, vqa], cap).output == "caps"
+
+    def test_interleaved_stateless_in_history(self):
+        """App D Example 1: stateless calls in history don't break the walk."""
+        g = ToolCallGraph("t", skip_stateless=True)
+        load, pre = tc("load", mutates=True), tc("pre", mutates=True)
+        n1 = g.insert(g.root, load, tr("l"))
+        n2 = g.insert(n1, pre, tr("p"))
+        g.insert(n2, tc("seg", "x", mutates=False), tr("segs"))
+        hist = [load, tc("caption", 1, 2, mutates=False), pre]
+        assert g.lookup(hist, tc("seg", "x", mutates=False)).output == "segs"
+
+    def test_conservative_mode_treats_all_stateful(self):
+        g = ToolCallGraph("t", skip_stateless=False)
+        n1 = g.insert(g.root, tc("a", mutates=False), tr(1))
+        assert len(g) == 2  # created a real node despite mutates=False
+        lpm = g.lpm([tc("a", mutates=False)])
+        assert lpm.node is n1
+
+
+class TestPersistence:
+    def test_roundtrip(self):
+        g = ToolCallGraph("task-42", skip_stateless=True)
+        n1 = g.insert(g.root, tc("a", 1), tr({"x": [1, 2]}, t=3.5), snapshot=b"blob")
+        g.insert(n1, tc("b"), tr("r2"))
+        g.insert(n1, tc("s", mutates=False), tr("stateless"))
+        n1.hits = 7
+        g2 = ToolCallGraph.from_bytes(g.to_bytes())
+        assert g2.task_id == "task-42"
+        assert len(g2) == len(g)
+        node, _ = g2.walk([tc("a", 1)])
+        assert node.snapshot == b"blob" and node.hits == 7
+        assert g2.lookup([], tc("a", 1)).output == {"x": [1, 2]}
+        assert g2.lookup([tc("a", 1)], tc("s", mutates=False)).output == "stateless"
+
+    def test_to_dot(self):
+        g = ToolCallGraph("t")
+        g.insert(g.root, tc("a"), tr(1))
+        dot = g.to_dot()
+        assert "digraph TCG" in dot and "a(" in dot
